@@ -1,0 +1,76 @@
+"""Pallas kernel benchmarks: wall time (interpret mode on CPU — a correctness
+path, not a perf claim) + the HBM-traffic model for the chain2d fused kernel
+(the paper's cache-blocking win at the VMEM level, derived analytically from
+BlockSpec geometry: this is the number that matters for the TPU target).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import chain2d, stencil2d, stencil3d
+from repro.kernels.ref import chain2d_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def chain_traffic_model(H: int, W: int, K: int, block_rows: int,
+                        dtype_bytes: int = 4) -> Dict:
+    """HBM bytes for K sweeps: unfused (2 passes/sweep) vs fused chain kernel
+    (1 read + 1 write total, plus the halo skirt re-reads per block)."""
+    unfused = K * 2 * H * W * dtype_bytes
+    n_blocks = -(-H // block_rows)
+    fused_read = n_blocks * (block_rows + 2 * K) * (W + 2 * K) * dtype_bytes
+    fused = fused_read + H * W * dtype_bytes
+    redundant_compute = ((block_rows + 2 * K) / block_rows - 1)
+    return {
+        "unfused_bytes": unfused,
+        "fused_bytes": fused,
+        "traffic_reduction": unfused / fused,
+        "redundant_compute_frac": redundant_compute,
+    }
+
+
+def run() -> List[Dict]:
+    rng = np.random.RandomState(0)
+    rows = []
+    c2 = jnp.asarray([0.5, 0.125, 0.125], jnp.float32)
+    c3 = jnp.asarray([0.4, 0.1, 0.1, 0.1], jnp.float32)
+
+    x2 = jnp.asarray(rng.rand(258, 258), jnp.float32)
+    rows.append({"name": "stencil2d_256", "us": _time(stencil2d, x2, c2)})
+    x3 = jnp.asarray(rng.rand(34, 66, 66), jnp.float32)
+    rows.append({"name": "stencil3d_32", "us": _time(stencil3d, x3, c3)})
+    for K in (2, 4, 8):
+        xk = jnp.asarray(rng.rand(256 + 2 * K, 256 + 2 * K), jnp.float32)
+        us_fused = _time(lambda x: chain2d(x, c2, K), xk)
+        us_ref = _time(lambda x: chain2d_ref(x, c2, K), xk)
+        m = chain_traffic_model(4096, 4096, K, block_rows=256)
+        rows.append({
+            "name": f"chain2d_K{K}", "us": us_fused, "ref_us": us_ref,
+            "traffic_reduction_4k": round(m["traffic_reduction"], 2),
+            "redundant_compute": round(m["redundant_compute_frac"], 3),
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        extra = ",".join(f"{k}={v}" for k, v in r.items() if k not in ("name", "us"))
+        print(f"{r['name']},{r['us']:.0f}us,{extra}")
+    return run()
+
+
+if __name__ == "__main__":
+    main()

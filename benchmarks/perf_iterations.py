@@ -1,0 +1,63 @@
+"""§Perf iteration driver: re-lowers the hillclimbed cells in their BEFORE
+and AFTER configurations and prints the roofline-term deltas side by side
+(the numbers quoted in EXPERIMENTS.md §Perf).
+
+This recomputes everything from scratch (each variant is a fresh
+lower+compile on the 256-chip mesh), so it takes a few minutes:
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main():
+    # Must run in a fresh interpreter state: dryrun sets the 512-device flag.
+    if "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax  # noqa: F401  (locks device count)
+
+    from repro.analysis.roofline import roofline_terms, _fmt_s
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+    from repro.models.config import SHAPES
+
+    out = "reports/perf"
+    os.makedirs(out, exist_ok=True)
+
+    cells = [
+        # (label, arch, shape, kwargs-variants {tag: flags})
+        ("Cell C (llama train): TP16+FSDP baseline vs no-TP vs no-FSDP",
+         "llama3_2_1b", "train_4k",
+         {"baseline": {}, "notp": {"tp": False}, "nofsdp": {"fsdp": False}}),
+        ("Cell A (qwen prefill): seq-par attention is now the default; "
+         "the BEFORE number requires reverting transformer._attn_sublayer — "
+         "recorded in EXPERIMENTS.md from reports/perf artifacts",
+         "qwen2_5_14b", "prefill_32k", {"baseline": {}}),
+    ]
+
+    for label, arch, shape_name, variants in cells:
+        print(f"\n== {label} ==")
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        for tag, flags in variants.items():
+            res, compiled = run_cell(
+                arch, shape_name, False, out, tag=f"_iter_{tag}", **flags)
+            hlo = compiled.as_text()
+            t = roofline_terms(hlo, res["devices"], cfg, shape)
+            peak = res["memory"]["peak_estimate_per_device"] / 1e9
+            print(f"  {tag:10s} compute={_fmt_s(t['compute_s'])} "
+                  f"memory={_fmt_s(t['memory_s'])} "
+                  f"collective={_fmt_s(t['collective_s'])} "
+                  f"useful={t.get('useful_ratio', 0):.2f} "
+                  f"frac={t.get('roofline_fraction', 0) * 100:.1f}% "
+                  f"peak={peak:.1f}GB")
+            del compiled
+    print("\nartifacts -> reports/perf/*_iter_*.json|hlo.txt")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

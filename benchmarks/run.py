@@ -1,0 +1,73 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+  figs 3-6  -> paper_scaling  (KNL flat/cache/tiled + hit rates)
+  figs 7-9  -> gpu_scaling    (P100 explicit 3-slot streaming + ablations)
+  fig 11    -> um_scaling     (unified-memory model)
+  kernels   -> kernel_bench   (Pallas stencil kernels + VMEM-chain model)
+
+Prints ``name,value,derived`` CSV lines; writes reports/bench_results.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def main() -> None:
+    from . import gpu_scaling, kernel_bench, paper_scaling, um_scaling
+
+    results = {}
+    t0 = time.time()
+    print("== Figs 3-6: KNL problem scaling (model; GB/s) ==")
+    results["knl_scaling"] = paper_scaling.main()
+    print(f"\n== Figs 7-9: P100 explicit-management scaling + ablations "
+          f"(3-slot executor, modelled links) ==")
+    results["gpu_scaling"] = gpu_scaling.main()
+    print("\n== Fig 11: Unified-memory scaling (model; GB/s) ==")
+    results["um_scaling"] = um_scaling.main()
+    print("\n== Pallas kernels ==")
+    results["kernels"] = kernel_bench.main()
+
+    # headline reproduction checks (paper §5/§6 claims, at 3x capacity)
+    print("\n== Reproduction checks vs paper claims ==")
+    checks = []
+    for row in results["knl_scaling"]:
+        if row["app"] == "cloverleaf2d" and row["ratio"] >= 2.8:
+            eff = row["cache_tiled_gbs"] / max(
+                r["cache_tiled_gbs"] for r in results["knl_scaling"]
+                if r["app"] == "cloverleaf2d")
+            checks.append(("knl_cl2d_tiled_retention_at_3x", round(eff, 2),
+                           "paper 0.85; ours lower by the ~5x loop-count "
+                           "fidelity gap, see EXPERIMENTS §Paper"))
+            speed = row["cache_tiled_gbs"] / row["cache_gbs"]
+            checks.append(("knl_cl2d_tiling_speedup_at_3x", round(speed, 2),
+                           "paper ~2.2x"))
+            checks.append(("knl_cl2d_tiled_hit_rate_at_3x",
+                           round(row["tiled_hit_rate"], 2),
+                           "flat ~0.8+ vs untiled "
+                           f"{row['cache_hit_rate']:.2f} (Fig 4 shape)"))
+    for row in results["gpu_scaling"]:
+        if (row["app"] == "cloverleaf2d" and row["ratio"] == 3.0
+                and row["cyclic"] and row["prefetch"]):
+            checks.append((f"p100_{row['link']}_cl2d_efficiency_at_3x",
+                           round(row["efficiency"], 2),
+                           "paper: nvlink 0.84 / pcie 0.48"))
+        if (row["app"] == "opensbli" and row["ratio"] == 3.0
+                and row["cyclic"] and row["prefetch"]):
+            checks.append((f"p100_{row['link']}_sbli_efficiency_at_3x",
+                           round(row["efficiency"], 2),
+                           "paper: ~1.0 (fully hidden)"))
+    for name, val, note in checks:
+        print(f"{name},{val},{note}")
+    results["checks"] = checks
+
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"\ntotal bench time: {time.time() - t0:.0f}s; "
+          f"results -> reports/bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

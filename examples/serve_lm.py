@@ -1,0 +1,72 @@
+"""Serve a small model with batched requests — including the paper's
+out-of-core mode: weights streamed layer-by-layer from host memory through
+the 3-slot schedule, with device-resident weight footprint bounded by the
+window, validated against fully-resident decoding.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_reduced_config  # noqa: E402
+from repro.models import decode_step, init_params  # noqa: E402
+from repro.models.offload import StreamedDecoder  # noqa: E402
+from repro.models.transformer import init_cache  # noqa: E402
+
+
+def main():
+    cfg = get_reduced_config("llama3_2_1b").with_(num_layers=8)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, gen = 4, 16
+    prompts = jax.random.randint(key, (B,), 0, cfg.vocab_size)
+
+    # resident serving
+    cache = init_cache(cfg, B, gen + 1)
+    step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+    tok = prompts
+    t0 = time.perf_counter()
+    resident_out = []
+    for _ in range(gen):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, -1)
+        resident_out.append(tok)
+    jax.block_until_ready(tok)
+    t_res = time.perf_counter() - t0
+
+    # out-of-core serving: weights live in HOST memory, 3-slice window
+    streamer = StreamedDecoder(params, cfg, window=3)
+    cache = init_cache(cfg, B, gen + 1)
+    tok = prompts
+    t0 = time.perf_counter()
+    streamed_out = []
+    for _ in range(gen):
+        logits, cache = streamer.decode(cache, tok)
+        tok = jnp.argmax(logits, -1)
+        streamed_out.append(tok)
+    jax.block_until_ready(tok)
+    t_str = time.perf_counter() - t0
+
+    same = all(bool((a == b).all())
+               for a, b in zip(resident_out, streamed_out))
+    total_w = sum(np.asarray(l).nbytes
+                  for l in jax.tree.leaves(streamer.host_blocks))
+    print(f"batch={B} gen={gen} tokens")
+    print(f"resident : {t_res:.2f}s   (all {cfg.num_layers} layers on device)")
+    print(f"streamed : {t_str:.2f}s   (window=3 of {cfg.num_layers} layers; "
+          f"device weights {streamer.device_resident_bytes() / 1e6:.1f} MB "
+          f"of {total_w / 1e6:.1f} MB total)")
+    print(f"greedy outputs identical: {same}")
+    print(f"modelled step on TPU v5e (PCIe streaming, overlapped): "
+          f"{streamer.stats.modelled_step_s * 1e3:.2f} ms/token")
+    assert same
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Post-compile analysis: HLO parsing (scan-corrected costs) and roofline."""
+from .hlo_analysis import analyze_hlo_text
+from .roofline import roofline_terms
+
+__all__ = ["analyze_hlo_text", "roofline_terms"]

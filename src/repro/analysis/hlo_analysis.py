@@ -1,0 +1,366 @@
+"""Post-SPMD HLO parsing with while-loop trip-count correction.
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE — a scan-over-layers
+model under-reports FLOPs by ~num_layers.  This parser rebuilds per-module
+costs from the partitioned HLO text:
+
+  * builds the computation call graph (while bodies/conds, fusions, calls),
+  * extracts ``known_trip_count`` from each while's backend_config,
+  * propagates execution multipliers from ENTRY (nested loops multiply),
+  * dot FLOPs: 2 x |result| x |contracted dims| per dot x multiplier,
+  * HBM traffic: per top-level op, operands + results bytes x multiplier
+    (fusion internals excluded: a fusion reads its inputs and writes its
+    outputs exactly once — the roofline convention),
+  * collective wire bytes per op with ring conventions
+    (all-gather/reduce-scatter (g-1)/g, all-reduce 2(g-1)/g, all-to-all
+    (g-1)/g, collective-permute 1x), bucketed by replica-group size so DCN
+    (pod, group 2) and ICI collectives are charged to different links.
+
+Caveats (documented per EXPERIMENTS.md methodology): ``conditional`` branch
+bodies are counted once per invocation (upper bound — affects zamba2's
+every-6th-layer shared block); elementwise FLOPs are not counted (<2% of any
+cell here); convolutions are lowered to dots/elementwise by this model zoo.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 0.5,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 0.5,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.*?)\s*([a-z][\w\-]*)\((.*)$"
+)
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-_]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-_]+), body=%?([\w\.\-_]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # everything after the opening paren (operands + attrs)
+    comp: str
+
+    @property
+    def result_bytes(self) -> float:
+        return _shape_bytes(self.type_str)
+
+
+@dataclass
+class HloModule:
+    comps: Dict[str, List[Op]]
+    entry: str
+    symbols: Dict[str, Dict[str, str]]   # comp -> op name -> type_str
+
+
+def parse_hlo(text: str) -> HloModule:
+    comps: Dict[str, List[Op]] = {}
+    symbols: Dict[str, Dict[str, str]] = defaultdict(dict)
+    entry = ""
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = mc.group(2)
+            comps[cur] = []
+            if mc.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(_COMMENT_RE.sub("", line))
+        if not mo:
+            continue
+        name, type_str, opcode, rest = mo.groups()
+        op = Op(name, type_str, opcode, rest, cur)
+        comps[cur].append(op)
+        symbols[cur][name] = type_str
+    return HloModule(comps=comps, entry=entry, symbols=dict(symbols))
+
+
+def _multipliers(mod: HloModule) -> Dict[str, float]:
+    """Execution count of each computation, propagated from ENTRY."""
+    mult: Dict[str, float] = defaultdict(float)
+    mult[mod.entry] = 1.0
+    # topological-ish propagation: iterate until fixpoint (call graph is a DAG)
+    for _ in range(64):
+        changed = False
+        snapshot = dict(mult)
+        for comp, ops in mod.comps.items():
+            m = snapshot.get(comp, 0.0)
+            if m == 0.0:
+                continue
+            for op in ops:
+                if op.opcode == "while":
+                    wm = _WHILE_RE.search(op.rest)
+                    tm = _TRIP_RE.search(op.rest)
+                    n = float(tm.group(1)) if tm else 1.0
+                    if wm:
+                        cond, body = wm.group(1), wm.group(2)
+                        for callee, k in ((body, n), (cond, n + 1)):
+                            new = m * k
+                            if mult.get(callee, 0.0) < new:
+                                mult[callee] = new
+                                changed = True
+                else:
+                    for callee in _CALL_ATTR_RE.findall(op.rest):
+                        if callee in mod.comps:
+                            if mult.get(callee, 0.0) < m:
+                                mult[callee] = m
+                                changed = True
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Operand op-names from the call's argument list (up to the paren close)."""
+    depth = 1
+    out = []
+    token = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        token += ch
+    for part in re.findall(r"%([\w\.\-_]+)", token):
+        out.append(part)
+    return out
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
+    dims = _shape_dims(op.type_str)
+    result_elems = 1
+    for d in dims:
+        result_elems *= d
+    mcontract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = _operand_names(op.rest)
+    contract = 1
+    if mcontract and operands:
+        lhs_type = symbols.get(operands[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        for idx in (int(i) for i in mcontract.group(1).split(",") if i):
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * result_elems * contract
+
+
+def _group_size(op: Op, total_devices: int) -> int:
+    m = _GROUPS_RE.search(op.rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(op.rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total_devices
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda g: (g - 1) / g,
+    "all-gather-start": lambda g: (g - 1) / g,
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "all-reduce-start": lambda g: 2 * (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+    "collective-permute-start": lambda g: 1.0,
+}
+
+
+def _param_usage_bytes(mod: HloModule, comp: str) -> Dict[int, float]:
+    """For a fused computation: bytes actually READ from each parameter.
+
+    A parameter consumed only by dynamic-slice/gather ops costs the slice
+    bytes, not the whole buffer (the stacked-layer weights threaded through a
+    scan are the canonical case: the body reads one layer, not all L)."""
+    ops = mod.comps.get(comp, [])
+    param_idx: Dict[str, int] = {}
+    for op in ops:
+        if op.opcode == "parameter":
+            m = re.match(r"(\d+)", op.rest)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+    usage: Dict[int, float] = {}
+    for pname, idx in param_idx.items():
+        total = 0.0
+        sliced_only = True
+        for op in ops:
+            if op.opcode == "parameter":
+                continue
+            refs = _operand_names(op.rest)
+            if pname not in refs:
+                continue
+            if op.opcode in ("dynamic-slice", "gather", "slice"):
+                total += op.result_bytes
+            elif op.opcode == "dynamic-update-slice" and refs and refs[0] == pname:
+                # writes into the buffer; the read side is the update operand
+                total += 0.0
+            else:
+                sliced_only = False
+                break
+        if sliced_only:
+            usage[idx] = total
+    return usage
+
+
+def analyze_hlo_text(text: str, total_devices: int, dcn_group_size: int = 2,
+                     breakdown: bool = False) -> Dict:
+    """Scan-corrected per-device cost summary of one compiled module."""
+    mod = parse_hlo(text)
+    mult = _multipliers(mod)
+    top_hbm: List[Tuple[float, str, str, float, str]] = []
+
+    # computations reached via `fusion(..) calls=` — their internal ops are
+    # excluded from the HBM-traffic sum (counted at the call site).
+    fused: set = set()
+    for comp, ops in mod.comps.items():
+        for op in ops:
+            if op.opcode == "fusion":
+                for callee in _CALL_ATTR_RE.findall(op.rest):
+                    fused.add(callee)
+
+    dot_flops = 0.0
+    hbm_bytes = 0.0
+    coll = defaultdict(float)        # opcode -> wire bytes
+    coll_ici = 0.0
+    coll_dcn = 0.0
+    n_coll = defaultdict(int)
+    for comp, ops in mod.comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        symbols = mod.symbols.get(comp, {})
+        in_fused = comp in fused
+        for op in ops:
+            if op.opcode == "dot":
+                dot_flops += m * _dot_flops(op, symbols)
+            if in_fused:
+                continue
+            if op.opcode in ("parameter", "constant", "tuple", "get-tuple-element",
+                             "bitcast", "while", "call", "conditional", "reshape",
+                             "transpose", "copy-start", "copy-done"):
+                continue
+            # HBM traffic: operands + result (fusion-boundary convention),
+            # slice-aware: dynamic-slice/gather read only what they produce.
+            operands = _operand_names(op.rest)
+            if op.opcode in ("dynamic-slice", "gather", "slice"):
+                ob = op.result_bytes
+            elif op.opcode == "dynamic-update-slice":
+                upd = (_shape_bytes(symbols.get(operands[1], ""))
+                       if len(operands) > 1 else op.result_bytes)
+                hbm_bytes += m * 2 * upd
+                continue
+            elif op.opcode == "fusion":
+                callees = _CALL_ATTR_RE.findall(op.rest)
+                usage = _param_usage_bytes(mod, callees[0]) if callees else {}
+                ob = 0.0
+                for i, nm in enumerate(operands):
+                    full = _shape_bytes(symbols.get(nm, ""))
+                    ob += min(usage.get(i, full), full) if i in usage else full
+                # in-place scatter fusions: a DUS-rooted fusion writes only
+                # the update slice, not the whole aliased buffer.
+                wb = op.result_bytes
+                if callees:
+                    root_dus = [
+                        fop for fop in mod.comps.get(callees[0], [])
+                        if fop.opcode == "dynamic-update-slice"
+                    ]
+                    if root_dus:
+                        fsym = mod.symbols.get(callees[0], {})
+                        upd = 0.0
+                        for fop in root_dus:
+                            onames = _operand_names(fop.rest)
+                            if len(onames) > 1:
+                                upd += _shape_bytes(fsym.get(onames[1], ""))
+                        if upd:
+                            wb = min(wb, upd)
+                hbm_bytes += m * (ob + wb)
+                if breakdown:
+                    top_hbm.append((m * (ob + wb), op.opcode,
+                                    op.type_str[:48], m, comp[:36]))
+                continue
+            else:
+                ob = sum(_shape_bytes(symbols.get(nm, "")) for nm in operands)
+            hbm_bytes += m * (ob + op.result_bytes)
+            if breakdown:
+                top_hbm.append((m * (ob + op.result_bytes), op.opcode,
+                                op.type_str[:48], m, comp[:36]))
+            if op.opcode in COLLECTIVES:
+                g = _group_size(op, total_devices)
+                wire = op.result_bytes * _WIRE_FACTOR[op.opcode](g)
+                coll[op.opcode] += m * wire
+                n_coll[op.opcode] += 1
+                if g <= dcn_group_size:
+                    coll_dcn += m * wire
+                else:
+                    coll_ici += m * wire
+    if breakdown:
+        return {
+            "dot_flops": dot_flops,
+            "hbm_bytes": hbm_bytes,
+            "top_hbm": sorted(top_hbm, reverse=True)[:15],
+            "collective_wire_bytes": dict(coll),
+            "collective_bytes_ici": coll_ici,
+            "collective_bytes_dcn": coll_dcn,
+            "collective_op_counts": dict(n_coll),
+            "num_computations": len(mod.comps),
+        }
+    return {
+        "dot_flops": dot_flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_wire_bytes": dict(coll),
+        "collective_bytes_ici": coll_ici,
+        "collective_bytes_dcn": coll_dcn,
+        "collective_op_counts": dict(n_coll),
+        "num_computations": len(mod.comps),
+    }

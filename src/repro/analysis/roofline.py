@@ -1,0 +1,125 @@
+"""Roofline terms per (arch x shape x mesh) cell, from dry-run artifacts.
+
+    compute term    = HLO_dot_FLOPs_per_device / peak_FLOP/s
+    memory term     = HBM_bytes_per_device / HBM_bw
+    collective term = ICI_wire_bytes / ICI_bw + DCN_wire_bytes / DCN_bw
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI; DCN across pods modelled at 6.25 GB/s/chip.
+
+MODEL_FLOPS = 6·N·T (train) / 2·N·T (inference) with N = active params and
+T = global tokens; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat and
+redundant compute (ratio < 1 when the compiled module does extra work, e.g.
+rematerialised layers; > 1 would flag under-counting).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from .hlo_analysis import analyze_hlo_text
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 6.25e9
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for the whole cell step (global, all devices)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def roofline_terms(hlo_text: str, devices: int, cfg=None, shape=None,
+                   microbatch_note: str = "") -> Dict:
+    a = analyze_hlo_text(hlo_text, devices)
+    compute_s = a["dot_flops"] / PEAK_FLOPS
+    memory_s = a["hbm_bytes"] / HBM_BW
+    coll_s = a["collective_bytes_ici"] / ICI_BW + a["collective_bytes_dcn"] / DCN_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    out = {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound_s,
+        "dot_flops_per_device": a["dot_flops"],
+        "hbm_bytes_per_device": a["hbm_bytes"],
+        "ici_bytes": a["collective_bytes_ici"],
+        "dcn_bytes": a["collective_bytes_dcn"],
+        "collectives": a["collective_op_counts"],
+    }
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        out["model_flops_total"] = mf
+        out["model_flops_per_device"] = mf / devices
+        out["useful_ratio"] = (mf / devices) / max(a["dot_flops"], 1.0)
+        # roofline fraction: useful work time over the actual bound
+        out["roofline_fraction"] = (mf / devices / PEAK_FLOPS) / max(bound_s, 1e-30)
+    return out
+
+
+def analyze_report_dir(dryrun_dir: str, out_md: Optional[str] = None) -> List[Dict]:
+    """Build the full roofline table from reports/dryrun artifacts."""
+    from ..configs import get_config
+    from ..models.config import SHAPES
+
+    rows = []
+    for jpath in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(jpath) as f:
+            meta = json.load(f)
+        hpath = jpath.replace(".json", ".hlo.txt")
+        if not os.path.exists(hpath):
+            continue
+        cfg = get_config(meta["arch"].replace("-", "_").replace(".", "_"))
+        shape = SHAPES[meta["shape"]]
+        with open(hpath) as f:
+            terms = roofline_terms(f.read(), meta["devices"], cfg, shape)
+        rows.append({**meta, **terms, "file": os.path.basename(jpath)})
+
+    if out_md:
+        with open(out_md, "w") as f:
+            f.write(_to_markdown(rows))
+    return rows
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def _to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| cell | mesh | compute | memory | collective | bound | "
+           "MODEL/HLO flops | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} x {r['shape']} | {r['mesh']} | "
+            f"{_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} | "
+            f"{_fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r.get('useful_ratio', 0):.2f} | "
+            f"{r.get('roofline_fraction', 0) * 100:.1f}% |\n")
+    return "".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    d = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun"
+    rows = analyze_report_dir(d, out_md="reports/roofline.md")
+    print(_to_markdown(rows))

@@ -1,0 +1,41 @@
+"""repro.core — the paper's contribution: runtime skewed tiling + out-of-core
+streaming execution of stencil loop chains (OPS-style DSL in JAX)."""
+from .block import Block
+from .dataset import Dataset, make_dataset
+from .dependency import ChainInfo, analyze_chain
+from .executor import ChainStats, OOCConfig, OutOfCoreExecutor, ResidentExecutor
+from .lazy import ReferenceRuntime, Runtime
+from .loop import (
+    INC,
+    READ,
+    RW,
+    WRITE,
+    AccessMode,
+    Accessor,
+    Arg,
+    ParallelLoop,
+    ReductionSpec,
+)
+from .memory import (
+    GB,
+    KNL_7210,
+    P100_NVLINK,
+    P100_PCIE,
+    PRESETS,
+    TPU_V5E,
+    HardwareModel,
+    TransferLedger,
+)
+from .stencil import Stencil, box_stencil, offset_stencil, point_stencil, star_stencil
+from .tiling import TileSchedule, choose_num_tiles, make_tile_schedule
+
+__all__ = [
+    "Block", "Dataset", "make_dataset", "ChainInfo", "analyze_chain",
+    "ChainStats", "OOCConfig", "OutOfCoreExecutor", "ResidentExecutor",
+    "ReferenceRuntime", "Runtime", "AccessMode", "Accessor", "Arg",
+    "ParallelLoop", "ReductionSpec", "READ", "WRITE", "RW", "INC",
+    "GB", "KNL_7210", "P100_NVLINK", "P100_PCIE", "PRESETS", "TPU_V5E",
+    "HardwareModel", "TransferLedger", "Stencil", "box_stencil",
+    "offset_stencil", "point_stencil", "star_stencil", "TileSchedule",
+    "choose_num_tiles", "make_tile_schedule",
+]

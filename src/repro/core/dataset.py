@@ -1,0 +1,109 @@
+"""Datasets — grid-resident arrays owned by the runtime (``ops_dat``).
+
+A dataset lives in *slow memory* (host DRAM, represented as a NumPy array)
+as its home location; the out-of-core executor stages footprints of it into
+*fast memory* (device HBM) per tile.  Users only hold opaque handles; data
+returns to user space through ``fetch`` (which is also what terminates lazy
+loop chains, exactly as in OPS).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .block import Block
+
+
+@dataclass
+class Dataset:
+    """An array defined over a block, with per-dimension halo padding.
+
+    The backing array spans ``[-halo[d][0], size[d] + halo[d][1])`` per dim.
+    Index convention throughout the runtime: *grid coordinates* (interior
+    starts at 0); array index = grid index + halo_lo.
+    """
+
+    block: Block
+    name: str
+    dtype: np.dtype
+    halo: Tuple[Tuple[int, int], ...]
+    data: np.ndarray = field(repr=False, default=None)
+
+    def __post_init__(self) -> None:
+        if len(self.halo) != self.block.ndim:
+            raise ValueError(f"dat {self.name!r}: halo arity mismatch")
+        shape = self.padded_shape
+        if self.data is None:
+            self.data = np.zeros(shape, dtype=self.dtype)
+        else:
+            self.data = np.asarray(self.data, dtype=self.dtype)
+            if self.data.shape != shape:
+                raise ValueError(
+                    f"dat {self.name!r}: data shape {self.data.shape} != padded {shape}"
+                )
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return self.block.ndim
+
+    @property
+    def padded_shape(self) -> Tuple[int, ...]:
+        return tuple(
+            self.block.size[d] + self.halo[d][0] + self.halo[d][1]
+            for d in range(self.block.ndim)
+        )
+
+    def bounds(self, dim: int) -> Tuple[int, int]:
+        """Grid-coordinate extent of the backing array along ``dim``."""
+        return -self.halo[dim][0], self.block.size[dim] + self.halo[dim][1]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.data.nbytes)
+
+    # -- host-side access (grid coordinates) --------------------------------
+    def _to_index(self, grid_slices: Tuple[slice, ...]) -> Tuple[slice, ...]:
+        idx = []
+        for d, sl in enumerate(grid_slices):
+            h = self.halo[d][0]
+            idx.append(slice(sl.start + h, sl.stop + h))
+        return tuple(idx)
+
+    def read(self, grid_box: Tuple[Tuple[int, int], ...]) -> np.ndarray:
+        """Read a grid-coordinate box from the slow-memory home copy."""
+        return self.data[self._to_index(tuple(slice(a, b) for a, b in grid_box))]
+
+    def write(self, grid_box: Tuple[Tuple[int, int], ...], values: np.ndarray) -> None:
+        self.data[self._to_index(tuple(slice(a, b) for a, b in grid_box))] = values
+
+    def interior(self) -> np.ndarray:
+        """Interior view (no halos) — the usual thing users fetch."""
+        return self.read(self.block.full_range())
+
+
+def make_dataset(
+    block: Block,
+    name: str,
+    halo: int | Tuple[Tuple[int, int], ...] = 1,
+    dtype=np.float32,
+    init: Optional[np.ndarray] = None,
+) -> Dataset:
+    """Convenience constructor; scalar halo means the same pad on every face."""
+    if isinstance(halo, int):
+        halo = tuple((halo, halo) for _ in range(block.ndim))
+    dat = Dataset(block=block, name=name, dtype=np.dtype(dtype), halo=halo)
+    if init is not None:
+        init = np.asarray(init, dtype=dat.dtype)
+        if init.shape == dat.padded_shape:
+            dat.data[...] = init
+        elif init.shape == block.size:
+            dat.write(block.full_range(), init)
+        else:
+            raise ValueError(
+                f"init shape {init.shape} matches neither padded {dat.padded_shape} "
+                f"nor interior {block.size}"
+            )
+    return dat

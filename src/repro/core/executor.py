@@ -1,0 +1,435 @@
+"""Out-of-core executors (the paper's §4, Algorithm 1).
+
+``OutOfCoreExecutor`` — explicit memory management with three slots:
+while tile *t* executes (stream 0), tile *t+1*'s right footprint uploads
+(stream 1) and tile *t−1*'s left footprint downloads (stream 2); after each
+tile the right edge is copied device-side into the next slot.  Transfer
+elision per §4.1: read-only datasets never download, write-first datasets
+never upload, Cyclic additionally skips the download of write-first
+temporaries, and speculative prefetch uploads the *next* chain's first tile
+during the current chain's last tile.
+
+``ResidentExecutor`` — the paper's baseline: everything resident in fast
+memory for the whole run (raises, like the paper's segfault, if it can't fit).
+
+Data plane: home copies are NumPy (slow memory); slots are JAX device arrays;
+uploads/downloads go through ``jnp.asarray``/``np.asarray`` so the data path
+is real on every backend, while *timings* for the paper's platforms come from
+the calibrated :class:`~repro.core.memory.HardwareModel` ledger.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .dependency import ChainInfo, analyze_chain, chain_signature
+from .engine import TileEngine
+from .loop import ParallelLoop
+from .memory import HardwareModel, TPU_V5E, TransferLedger
+from .tiling import (
+    Interval,
+    TileSchedule,
+    choose_num_tiles,
+    make_tile_schedule,
+)
+
+
+@dataclass
+class OOCConfig:
+    hw: HardwareModel = TPU_V5E
+    capacity_bytes: Optional[float] = None   # default: hw.fast_capacity
+    num_slots: int = 3
+    num_tiles: Optional[int] = None          # default: smallest that fits
+    tiled_dim: int = 0
+    cyclic: bool = False                     # §4.1 unsafe temporaries opt
+    prefetch: bool = False                   # §4.1 speculative prefetch
+    flops_per_point: Optional[int] = None    # compute model override
+    # Schedule/ledger only — no data plane.  For modelled benchmarks at
+    # scaled-down sizes (correctness is covered by the executing tests).
+    simulate_only: bool = False
+
+    @property
+    def capacity(self) -> float:
+        return self.capacity_bytes if self.capacity_bytes is not None else self.hw.fast_capacity
+
+
+@dataclass
+class ChainStats:
+    num_tiles: int
+    loop_bytes: int            # the paper's 'useful bytes' for avg-BW metric
+    uploaded: int
+    downloaded: int
+    edge_bytes: int
+    prefetch_hits: int
+    wall_s: float
+    modelled_s: float
+    achieved_bw_model: float   # loop_bytes / modelled makespan
+    slot_bytes: int
+
+
+def _region_to_slot(iv: Interval, origin: int) -> Tuple[int, int]:
+    return iv.lo - origin, iv.hi - origin
+
+
+class OutOfCoreExecutor:
+    """Explicitly-managed 3-slot streaming executor (Algorithm 1)."""
+
+    def __init__(self, config: OOCConfig = None):
+        self.cfg = config or OOCConfig()
+        self._engines: Dict[Tuple, TileEngine] = {}
+        # Speculative prefetch state: what we uploaded ahead for the next
+        # chain: {dat_name: Interval} plus the signature we guessed from.
+        self._spec_uploaded: Dict[str, Interval] = {}
+        self._spec_sig = None
+        self.history: List[ChainStats] = []
+
+    # -- helpers -------------------------------------------------------------
+    def _dat_np_region(self, dat, iv: Interval) -> np.ndarray:
+        td = self.cfg.tiled_dim
+        h = dat.halo[td][0]
+        idx = [slice(None)] * dat.ndim
+        idx[td] = slice(iv.lo + h, iv.hi + h)
+        return dat.data[tuple(idx)]
+
+    def _write_np_region(self, dat, iv: Interval, values: np.ndarray) -> None:
+        td = self.cfg.tiled_dim
+        h = dat.halo[td][0]
+        idx = [slice(None)] * dat.ndim
+        idx[td] = slice(iv.lo + h, iv.hi + h)
+        dat.data[tuple(idx)] = values
+
+    @staticmethod
+    def _slot_slice(arr, lo: int, hi: int, td: int):
+        idx = [slice(None)] * arr.ndim
+        idx[td] = slice(lo, hi)
+        return tuple(idx)
+
+    def _nbytes(self, dat, iv: Interval) -> int:
+        other = 1
+        for d, s in enumerate(dat.padded_shape):
+            if d != self.cfg.tiled_dim:
+                other *= s
+        return iv.length * other * dat.dtype.itemsize
+
+    # -- main entry ------------------------------------------------------------
+    def run_chain(self, loops: Sequence[ParallelLoop]) -> Dict[str, np.ndarray]:
+        """Run one chain; if no tile count makes its slots fit fast memory
+        (skew span exceeding the grid — long chains on small problems), split
+        the chain and run the halves sequentially.  This is the runtime
+        equivalent of OPS bounding the number of loops tiled across."""
+        try:
+            return self._run_chain_tiled(loops)
+        except MemoryError:
+            if len(loops) <= 1:
+                raise
+            mid = len(loops) // 2
+            out = self.run_chain(loops[:mid])
+            out.update(self.run_chain(loops[mid:]))
+            return out
+
+    def _run_chain_tiled(self, loops: Sequence[ParallelLoop]) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        td = cfg.tiled_dim
+        t_wall = time.perf_counter()
+        info = analyze_chain(loops, tiled_dim=td)
+        n_tiles = cfg.num_tiles or choose_num_tiles(
+            info, int(cfg.capacity), num_slots=cfg.num_slots
+        )
+        sched = make_tile_schedule(info, n_tiles)
+        slot_bytes = sched.slot_bytes()
+        if cfg.num_slots * slot_bytes > cfg.capacity:
+            raise MemoryError(
+                f"{cfg.num_slots} slots x {slot_bytes}B exceed fast capacity "
+                f"{cfg.capacity}B; increase num_tiles"
+            )
+
+        sig = chain_signature(info)
+        engine = self._engines.get(sig)
+        if engine is None:
+            engine = TileEngine(info)
+            self._engines[sig] = engine
+
+        ledger = TransferLedger(cfg.hw)
+        # Slot allocation: uniform arrays, max footprint length per dat.
+        def fresh_slot():
+            slot = {}
+            for name, ln in sched.max_fp_len.items():
+                dat = info.datasets[name]
+                shape = list(dat.padded_shape)
+                shape[td] = ln
+                slot[name] = jnp.zeros(tuple(shape), dtype=dat.dtype)
+            return slot
+
+        sim = cfg.simulate_only
+        slots = [({} if sim else fresh_slot()) for _ in range(cfg.num_slots)]
+        origins = [dict() for _ in range(cfg.num_slots)]  # per-slot dat origins
+
+        reductions: Dict[str, np.ndarray] = {}
+        red_specs = {}
+        for lp in loops:
+            for r in lp.reductions:
+                red_specs[r.name] = r
+
+        uploaded = downloaded = edge_bytes = 0
+        prefetch_hits = 0
+        # event ids for stream dependency wiring
+        last_compute_eid: Optional[int] = None
+        last_upload_eid: Optional[int] = None
+        last_download_eid: Dict[int, Optional[int]] = {}  # slot -> eid
+        compute_eids: List[Optional[int]] = [None] * sched.num_tiles
+
+        spec_valid = (
+            cfg.prefetch
+            and self._spec_sig is not None
+            and self._spec_sig == sig
+            and bool(self._spec_uploaded)
+        )
+
+        for t, tile in enumerate(sched.tiles):
+            s = t % cfg.num_slots
+            slot = slots[s]
+            org = {name: iv.lo for name, iv in tile.footprint.items() if not iv.empty}
+            origins[s] = org
+
+            # ---- preparation phase: upload this tile's new data ------------
+            # (Algorithm 1 issues tile t+1's upload during tile t; the ledger
+            # wires that overlap; data-plane order here is sequential & safe.)
+            # Per-tile transfers COALESCE into one ledger event per direction
+            # (one staging copy per tile — at real scale per-dat latencies are
+            # noise; at scaled-down bench sizes they would dominate falsely).
+            up_deps = []
+            if last_download_eid.get(s) is not None:
+                up_deps.append(last_download_eid[s])   # slot reuse fence
+            if last_upload_eid is not None:
+                up_deps.append(last_upload_eid)        # stream-1 FIFO
+            tile_up_bytes = 0
+            for name, pieces in tile.upload.items():
+                if name in info.write_first:
+                    # §4.1: write-first data never uploads — except rows the
+                    # chain reads before any write reaches them (halo skirts):
+                    # those are genuinely consumed from home (cold reads).
+                    cold = info.cold.get(name, [])
+                    pieces = tuple(
+                        p
+                        for iv in pieces
+                        for p in (iv.clamp(clo, chi) for clo, chi in cold)
+                        if not p.empty
+                    )
+                for iv in pieces:
+                    if iv.empty:
+                        continue
+                    use = iv
+                    if spec_valid and t == 0:
+                        pre = self._spec_uploaded.get(name, ())
+                        for piv in pre:
+                            hit = iv.intersect(piv)
+                            if not hit.empty and hit.lo == iv.lo:
+                                prefetch_hits += 1
+                                use = Interval(hit.hi, iv.hi)  # only the miss part
+                                break
+                    if use.empty:
+                        continue
+                    if not sim:
+                        chunk = self._dat_np_region(info.datasets[name], use)
+                        lo, hi = _region_to_slot(use, org[name])
+                        slot[name] = slot[name].at[
+                            self._slot_slice(slot[name], lo, hi, td)
+                        ].set(jnp.asarray(chunk))
+                    tile_up_bytes += self._nbytes(info.datasets[name], use)
+            if tile_up_bytes:
+                uploaded += tile_up_bytes
+                last_upload_eid = ledger.add(
+                    1, "upload", tile_up_bytes, ledger.t_up(tile_up_bytes),
+                    tuple(up_deps))
+
+            # ---- execution phase -------------------------------------------
+            comp_deps = []
+            if last_upload_eid is not None:
+                comp_deps.append(last_upload_eid)
+            if last_compute_eid is not None:
+                comp_deps.append(last_compute_eid)
+            tile_bytes = 0
+            tile_flops = 0
+            for k, box in enumerate(tile.loop_ranges):
+                if box is None:
+                    continue
+                npts = 1
+                for a, b in box:
+                    npts *= b - a
+                lp = info.loops[k]
+                full_pts = 1
+                for a, b in lp.range_:
+                    full_pts *= b - a
+                frac = npts / full_pts
+                tile_bytes += int(lp.bytes_moved() * frac)
+                tile_flops += int(lp.flops(cfg.flops_per_point) * frac)
+            if not sim:
+                new_slot, tile_reds = engine.run_tile(tile, slot, org)
+                slots[s] = new_slot
+                slot = new_slot
+                for name, val in tile_reds.items():
+                    spec = red_specs[name]
+                    if name in reductions:
+                        reductions[name] = np.asarray(
+                            spec.combine(reductions[name], val))
+                    else:
+                        reductions[name] = np.asarray(val)
+            last_compute_eid = ledger.add(
+                0, "compute", tile_bytes, ledger.t_compute(tile_bytes, tile_flops),
+                tuple(comp_deps),
+            )
+            compute_eids[t] = last_compute_eid
+
+            # ---- finishing phase --------------------------------------------
+            # Edge copy: right edge of tile t -> left edge region of slot t+1.
+            if t + 1 < sched.num_tiles:
+                nslot_i = (t + 1) % cfg.num_slots
+                next_tile = sched.tiles[t + 1]
+                next_org = {
+                    name: iv.lo
+                    for name, iv in next_tile.footprint.items()
+                    if not iv.empty
+                }
+                edge_deps = [last_compute_eid]
+                if last_download_eid.get(nslot_i) is not None:
+                    edge_deps.append(last_download_eid[nslot_i])
+                tile_edge_bytes = 0
+                for name, iv in tile.edge_to_next.items():
+                    if iv.empty or name not in next_org:
+                        continue
+                    if not sim:
+                        src_lo, src_hi = _region_to_slot(iv, org[name])
+                        dst_lo, dst_hi = _region_to_slot(iv, next_org[name])
+                        src = slots[s][name]
+                        dst = slots[nslot_i][name]
+                        vals = src[self._slot_slice(src, src_lo, src_hi, td)]
+                        slots[nslot_i][name] = dst.at[
+                            self._slot_slice(dst, dst_lo, dst_hi, td)
+                        ].set(vals)
+                    tile_edge_bytes += self._nbytes(info.datasets[name], iv)
+                if tile_edge_bytes:
+                    edge_bytes += tile_edge_bytes
+                    last_compute_eid = ledger.add(
+                        0, "edge", tile_edge_bytes,
+                        ledger.t_dd(2 * tile_edge_bytes), tuple(edge_deps))
+
+            # Download left footprint of modified datasets.
+            dn_deps = [compute_eids[t]]
+            tile_dn_bytes = 0
+            for name, pieces in tile.download.items():
+                if name in info.read_only:
+                    continue  # never written -> never download
+                if cfg.cyclic and name in info.write_first:
+                    continue  # §4.1 Cyclic: temporaries stay on device
+                for iv in pieces:
+                    if iv.empty:
+                        continue
+                    if not sim:
+                        lo, hi = _region_to_slot(iv, org[name])
+                        arr = slots[s][name]
+                        vals = np.asarray(arr[self._slot_slice(arr, lo, hi, td)])
+                        self._write_np_region(info.datasets[name], iv, vals)
+                    tile_dn_bytes += self._nbytes(info.datasets[name], iv)
+            if tile_dn_bytes:
+                downloaded += tile_dn_bytes
+                eid = ledger.add(2, "download", tile_dn_bytes,
+                                 ledger.t_down(tile_dn_bytes), tuple(dn_deps))
+                last_download_eid[s] = eid
+
+            # Speculative prefetch (§4.1): during the last tile, upload the
+            # next chain's assumed first tile (assume it mirrors this chain).
+            if cfg.prefetch and t == sched.num_tiles - 1:
+                first = sched.tiles[0]
+                nb_total = 0
+                self._spec_uploaded = {}
+                for name, pieces in first.upload.items():
+                    if name in info.write_first:
+                        continue
+                    live = tuple(iv for iv in pieces if not iv.empty)
+                    if not live:
+                        continue
+                    self._spec_uploaded[name] = live
+                    nb_total += sum(self._nbytes(info.datasets[name], iv) for iv in live)
+                if nb_total:
+                    # Overlaps the last compute on stream 1.
+                    ledger.add(1, "prefetch", nb_total, ledger.t_up(nb_total),
+                               (last_upload_eid,) if last_upload_eid else ())
+                self._spec_sig = sig
+
+        makespan = ledger.simulate()
+        wall = time.perf_counter() - t_wall
+        loop_bytes = info.loop_bytes()
+        self.history.append(
+            ChainStats(
+                num_tiles=sched.num_tiles,
+                loop_bytes=loop_bytes,
+                uploaded=uploaded,
+                downloaded=downloaded,
+                edge_bytes=edge_bytes,
+                prefetch_hits=prefetch_hits,
+                wall_s=wall,
+                modelled_s=makespan,
+                achieved_bw_model=loop_bytes / makespan if makespan else 0.0,
+                slot_bytes=slot_bytes,
+            )
+        )
+        return reductions
+
+    # -- aggregate metrics -----------------------------------------------------
+    def average_bandwidth_model(self) -> float:
+        """The paper's 'Average Bandwidth' over everything run so far."""
+        tot_b = sum(c.loop_bytes for c in self.history)
+        tot_t = sum(c.modelled_s for c in self.history)
+        return tot_b / tot_t if tot_t else 0.0
+
+
+class ResidentExecutor:
+    """Paper baseline: all datasets live in fast memory for the whole run.
+
+    Implemented as the 1-tile schedule with an up-front capacity check; the
+    ledger charges one initial upload per dataset (amortised across chains:
+    subsequent chains reuse resident data, as in the paper's setup) and no
+    per-chain traffic.
+    """
+
+    def __init__(self, hw: HardwareModel = TPU_V5E, capacity_bytes: Optional[float] = None):
+        self.hw = hw
+        self.capacity = capacity_bytes if capacity_bytes is not None else hw.fast_capacity
+        self._resident: Set[str] = set()
+        self._resident_bytes = 0
+        self._inner = OutOfCoreExecutor(
+            OOCConfig(hw=hw, capacity_bytes=float("inf"), num_tiles=1, num_slots=1)
+        )
+        self.history = self._inner.history
+
+    def run_chain(self, loops: Sequence[ParallelLoop]) -> Dict[str, np.ndarray]:
+        info = analyze_chain(loops)
+        for name, dat in info.datasets.items():
+            if name not in self._resident:
+                self._resident.add(name)
+                self._resident_bytes += dat.nbytes
+        if self._resident_bytes > self.capacity:
+            raise MemoryError(
+                f"resident set {self._resident_bytes}B exceeds fast memory "
+                f"{self.capacity}B — the paper's segfault, reproduced politely"
+            )
+        reds = self._inner.run_chain(loops)
+        # Resident baseline: per-chain link traffic doesn't apply; replace the
+        # modelled time with pure compute time.
+        last = self.history[-1]
+        ledger = TransferLedger(self.hw)
+        t = ledger.t_compute(last.loop_bytes, 0)
+        last.modelled_s = max(t, 1e-30)
+        last.achieved_bw_model = last.loop_bytes / last.modelled_s
+        return reds
+
+    def average_bandwidth_model(self) -> float:
+        tot_b = sum(c.loop_bytes for c in self.history)
+        tot_t = sum(c.modelled_s for c in self.history)
+        return tot_b / tot_t if tot_t else 0.0

@@ -1,0 +1,87 @@
+"""Reference executor: direct, eager, NumPy, no tiling, no staging.
+
+The oracle every other execution strategy is validated against (unit,
+integration and hypothesis property tests): loops run in program order,
+reads/writes hit the home arrays directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from .loop import AccessMode, Accessor, ParallelLoop
+
+
+class _NumpyAccessor(Accessor):
+    def __init__(self, loop: ParallelLoop):
+        self._loop = loop
+        self._dats = {a.dat.name: a.dat for a in loop.args}
+        self.shape = tuple(b - a for a, b in loop.range_)
+
+    def coords(self):
+        lp = self._loop
+        nd = lp.block.ndim
+        out = []
+        for d in range(nd):
+            ar = np.arange(lp.range_[d][0], lp.range_[d][1], dtype=np.int32)
+            shape = [1] * nd
+            shape[d] = ar.size
+            out.append(np.broadcast_to(ar.reshape(shape), self.shape))
+        return tuple(out)
+
+    def __call__(self, name: str, offset: Tuple[int, ...] = None):
+        lp = self._loop
+        nd = lp.block.ndim
+        if offset is None:
+            offset = (0,) * nd
+        dat = self._dats[name]
+        idx = tuple(
+            slice(lp.range_[d][0] + offset[d] + dat.halo[d][0],
+                  lp.range_[d][1] + offset[d] + dat.halo[d][0])
+            for d in range(nd)
+        )
+        return dat.data[idx]
+
+
+def run_loop_reference(lp: ParallelLoop) -> Dict[str, np.ndarray]:
+    """Execute one loop eagerly; returns reduction results (if any)."""
+    acc = _NumpyAccessor(lp)
+    out = lp.kernel(acc)
+    writes = {}
+    for arg in lp.args:
+        if not arg.mode.writes:
+            continue
+        # Copy: kernels may return views of the very arrays we are about to
+        # mutate (e.g. pure copy loops) — overlapping-view assignment corrupts.
+        vals = np.array(out[arg.dat.name], dtype=arg.dat.dtype, copy=True)
+        writes[arg.dat.name] = (arg, vals)
+    # Two-phase commit so RW loops read pre-loop values (parallel semantics).
+    for name, (arg, vals) in writes.items():
+        dat = arg.dat
+        idx = tuple(
+            slice(lp.range_[d][0] + dat.halo[d][0], lp.range_[d][1] + dat.halo[d][0])
+            for d in range(lp.block.ndim)
+        )
+        if arg.mode is AccessMode.INC:
+            dat.data[idx] += vals
+        else:
+            dat.data[idx] = vals
+    reds = {}
+    for rspec in lp.reductions:
+        reds[rspec.name] = np.asarray(out[rspec.name])
+    return reds
+
+
+def run_chain_reference(loops: Sequence[ParallelLoop]) -> Dict[str, np.ndarray]:
+    """Execute a chain eagerly in program order; merge reductions."""
+    merged: Dict[str, np.ndarray] = {}
+    for lp in loops:
+        reds = run_loop_reference(lp)
+        for name, val in reds.items():
+            spec = next(r for r in lp.reductions if r.name == name)
+            if name in merged:
+                merged[name] = np.asarray(spec.combine(merged[name], val))
+            else:
+                merged[name] = val
+    return merged

@@ -1,0 +1,4 @@
+"""Distribution layer: sharding rules, batch specs, gradient compression."""
+from .sharding import batch_specs, cache_specs, param_specs
+
+__all__ = ["param_specs", "batch_specs", "cache_specs"]

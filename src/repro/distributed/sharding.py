@@ -1,0 +1,194 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per architecture.
+
+Scheme (Megatron-TP x ZeRO-FSDP, MaxText-style):
+  * ``model`` axis — tensor parallel: attention heads, MLP hidden, vocab,
+    MoE expert dim (expert parallelism), Mamba inner channels.
+  * ``data`` axis  — batch data-parallel AND FSDP: every 2-D+ parameter also
+    shards its non-TP major dim over ``data`` (ZeRO-3; XLA all-gathers
+    per-layer on use, reduce-scatters grads).  Optimizer state inherits.
+  * ``pod`` axis   — extra data parallelism across pods over DCN (gradient
+    all-reduce once per step), or pipeline stages when pipeline mode is on.
+
+Head dims shard over ``model`` only when divisible (GQA kv=1/8 replicate;
+kv=16/32 shard) — the rule functions take the mesh and decide.
+
+Long-context decode (batch=1): the batch axes can't shard batch, so KV cache
+SEQUENCE dims shard over ``data`` instead — the SPMD partitioner then lowers
+softmax/matvec over the sharded length to the distributed flash-decode
+pattern (partial max/sum + psum).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0 and n >= mesh.shape[axis]
+
+
+def param_specs(params: Dict, cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,
+                tp: bool = True) -> Dict:
+    """PartitionSpec tree matching ``params`` (stacked layer dims -> None)."""
+    model = "model" if (tp and "model" in mesh.axis_names) else None
+    fs = "data" if (fsdp and "data" in mesh.axis_names) else None
+    kv_sharded = model if _div(cfg.kv_heads, mesh, "model") else None
+    q_sharded = model if _div(cfg.num_heads, mesh, "model") else None
+    vocab_sharded = model if _div(cfg.vocab_size, mesh, "model") else None
+    dm_fs = fs if _div(cfg.d_model, mesh, "data") else None
+    ff_div = lambda f: model if _div(f, mesh, "model") else None
+
+    def base_spec(name: str, leaf) -> Optional[P]:
+        nd = leaf.ndim
+        if name in ("embed",):
+            return P(vocab_sharded, dm_fs)
+        if name == "lm_head":
+            return P(dm_fs, vocab_sharded)
+        if name in ("wq", "w_q"):
+            return P(dm_fs, q_sharded, None)
+        if name in ("wk", "wv"):
+            return P(dm_fs, kv_sharded, None)
+        if name == "wo":
+            return P(q_sharded, None, dm_fs)
+        if name in ("bq",):
+            return P(q_sharded, None)
+        if name in ("bk", "bv"):
+            return P(kv_sharded, None)
+        if name == "w_dkv":
+            return P(dm_fs, None)
+        if name in ("w_uk", "w_uv"):
+            return P(None, q_sharded, None)
+        if name in ("w_gate", "w_up"):
+            if nd == 3 or nd == 4:      # stacked experts (E, d, f) [+layer]
+                return P(model, None, None)
+            return P(dm_fs, ff_div(leaf.shape[-1]))
+        if name == "w_down":
+            if nd == 3 or nd == 4:
+                return P(model, None, None)
+            return P(ff_div(leaf.shape[0]), dm_fs)
+        if name == "router":
+            return P(None, None)
+        if name == "in_proj":
+            return P(dm_fs, None)
+        if name == "out_proj":
+            return P(None, dm_fs)
+        if name in ("conv_w", "conv_b", "dt_bias", "a_log", "d_skip", "norm",
+                    "ln", "ln1", "ln2", "ln_x", "final_norm", "enc_norm"):
+            return P(*([None] * nd))
+        return P(*([None] * nd))
+
+    def assign(path, leaf):
+        keys = [getattr(p, "key", str(p)) for p in path]
+        name = keys[-1]
+        # stacked-layer leading dim (blocks/enc_blocks): prepend None
+        stacked = any(k in ("blocks", "enc_blocks") for k in keys)
+        sp = base_spec(name, leaf if not stacked else _Unstacked(leaf))
+        parts = list(sp)
+        if stacked:
+            parts = [None] + parts
+        # pad/truncate defensively to leaf rank
+        while len(parts) < leaf.ndim:
+            parts.append(None)
+        parts = parts[: leaf.ndim]
+        # drop shardings that don't divide
+        out = []
+        for dim, ax in zip(leaf.shape, parts):
+            if ax is None:
+                out.append(None)
+            else:
+                sizes = np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))])
+                out.append(ax if dim % sizes == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+class _Unstacked:
+    """Shape/ndim view of a stacked leaf with the layer dim removed."""
+
+    def __init__(self, leaf):
+        self.shape = leaf.shape[1:]
+        self.ndim = leaf.ndim - 1
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                include_model: bool = False) -> Dict[str, P]:
+    """Specs for train/prefill inputs.  ``include_model=True`` spreads the
+    batch over the model axis too (pure-DP/FSDP mode for models too small
+    to profit from TP)."""
+    ba = _batch_axes(mesh)
+    if include_model and "model" in mesh.axis_names:
+        ba = ba + ("model",)
+    nb = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    bspec = ba if (ba and global_batch % nb == 0) else ()
+    d = {
+        "tokens": P(bspec or None, None),
+        "labels": P(bspec or None, None),
+    }
+    if cfg.family == "vlm":
+        d["patches"] = P(bspec or None, None, None)
+    if cfg.encdec:
+        d["enc_inputs"] = P(bspec or None, None, None)
+    return d
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> Dict[str, P]:
+    """Specs for the serving cache.  batch >= batch-axes size shards batch;
+    batch == 1 (long-context) shards the sequence dim over data instead."""
+    ba = _batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    batch_ok = ba and batch % nb == 0
+    bspec = ba if batch_ok else None
+    kv_ok = _div(cfg.kv_heads, mesh, "model")
+    kv_sharded = "model" if kv_ok else None
+    # the cache SEQ dim takes every axis not otherwise used: `data` when the
+    # batch can't shard (long-context batch=1), and `model` when the kv-head
+    # count doesn't divide it (GQA kv=1/4/8 on a 16-way axis would otherwise
+    # REPLICATE a multi-GB cache per chip); masked softmax over the sharded
+    # length lowers to the distributed flash-decode pattern (partial
+    # max/sum + psum) automatically.
+    seq_axes = []
+    if not batch_ok and "data" in mesh.axis_names:
+        seq_axes.append("data")
+    if not kv_ok and "model" in mesh.axis_names:
+        seq_axes.append("model")
+    seq_spec = tuple(seq_axes) if seq_axes else None
+    h_sharded = "model" if _div(cfg.ssm_heads if cfg.ssm else 0, mesh, "model") else None
+
+    specs: Dict[str, P] = {"len": P()}
+    if cfg.family in ("dense", "vlm", "encdec") or (cfg.family == "moe" and not cfg.mla):
+        specs["k"] = P(None, bspec, seq_spec, kv_sharded, None)
+        specs["v"] = P(None, bspec, seq_spec, kv_sharded, None)
+    if cfg.family == "encdec":
+        specs["enc_k"] = P(None, bspec, seq_spec, kv_sharded, None)
+        specs["enc_v"] = P(None, bspec, seq_spec, kv_sharded, None)
+    if cfg.family == "moe" and cfg.mla:
+        # MLA compressed cache has no head dim; shard seq over model too.
+        mla_seq = tuple(dict.fromkeys(("model",) + tuple(seq_axes)))
+        specs["ckv"] = P(None, bspec, mla_seq)
+        specs["kr"] = P(None, bspec, mla_seq)
+    if cfg.family in ("ssm", "hybrid"):
+        specs["ssm"] = P(None, bspec, h_sharded, None, None)
+        specs["conv"] = P(None, bspec, None, None)
+    if cfg.family == "hybrid":
+        kvh = "model" if _div(cfg.kv_heads, mesh, "model") else None
+        specs["sk"] = P(None, bspec, seq_spec, kvh, None)
+        specs["sv"] = P(None, bspec, seq_spec, kvh, None)
+    return specs
+
+
+def shardings_of(specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

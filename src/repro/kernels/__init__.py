@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the stencil hot-spots the paper optimises.
+
+Each kernel has: the ``pl.pallas_call`` implementation (``<name>.py``), a
+jit'd public wrapper in :mod:`repro.kernels.ops`, and a pure-jnp oracle in
+:mod:`repro.kernels.ref`.  All kernels validate in ``interpret=True`` mode on
+CPU (this container) and are written against TPU constraints (VMEM-resident
+blocks, overlapping halo windows via per-dim ``Element`` indexing).
+
+``chain2d`` is the TPU-native adaptation of the paper's core idea one level
+below HBM: a whole loop-chain executes on a VMEM-resident tile (+K halo)
+before anything is written back — cache-blocking tiling where Pallas's grid
+pipeline plays the role of the paper's CUDA streams (automatic double
+buffering of HBM<->VMEM block transfers).
+"""
+from .ops import chain2d, stencil2d, stencil3d
+
+__all__ = ["stencil2d", "stencil3d", "chain2d"]

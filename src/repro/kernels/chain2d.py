@@ -1,0 +1,83 @@
+"""Fused K-sweep stencil chain — the paper's idea at the VMEM level.
+
+A loop-chain of K 5-point sweeps executes entirely on a VMEM-resident tile:
+the input window carries a K-cell halo (the chain's accumulated skew), all K
+sweeps run in registers/VMEM with the halo shrinking by one cell per sweep,
+and only the final tile is written back to HBM.  HBM traffic drops from
+2·K·N to (1+ε)·2·N — the same transfer-elision the out-of-core executor does
+one level up, with Pallas's grid pipeline providing the triple-buffering
+(upload next window / compute / write back previous) that Algorithm 1
+implements with CUDA streams.
+
+The redundant skirt compute ((bm+2K)/bm per tile) is the classic
+overlapped-tiling trade: on TPU the VPU is nowhere near the roofline for
+bandwidth-bound stencils, so trading flops for HBM bytes is the right
+direction (see EXPERIMENTS.md §Perf for the measured term shift).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import Element
+except ImportError:  # pragma: no cover
+    from jax._src.pallas.core import Element
+
+
+def _kernel(x_ref, c_ref, o_ref, *, steps: int, halo: int):
+    u = x_ref[...].astype(jnp.float32)
+    c0, cx, cy = c_ref[0], c_ref[1], c_ref[2]
+    # K sweeps; the valid region shrinks by h per sweep. Slicing with static
+    # bounds keeps everything in VMEM/registers — no HBM round-trips.
+    for s in range(steps):
+        D0, D1 = u.shape
+        h = halo
+        core = u[h:D0 - h, h:D1 - h]
+        up = u[0:D0 - 2 * h, h:D1 - h]
+        dn = u[2 * h:D0, h:D1 - h]
+        lf = u[h:D0 - h, 0:D1 - 2 * h]
+        rt = u[h:D0 - h, 2 * h:D1]
+        u = c0 * core + cx * (up + dn) + cy * (lf + rt)
+    o_ref[...] = u.astype(o_ref.dtype)
+
+
+def chain2d_pallas(
+    x: jax.Array,
+    coeffs: jax.Array,
+    *,
+    steps: int,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Apply ``steps`` fused 5-point sweeps.
+
+    Args:
+      x: (H + 2*steps, W + 2*steps) input padded by ``steps`` halo cells.
+      coeffs: (3,) [c0, cx, cy].
+    Returns:
+      (H, W) result after ``steps`` sweeps.
+    """
+    halo = 1
+    K = steps
+    Hp, Wp = x.shape
+    H, W = Hp - 2 * K, Wp - 2 * K
+    bm = min(block_rows, H)
+    assert H % bm == 0, (H, bm)
+    return pl.pallas_call(
+        functools.partial(_kernel, steps=K, halo=halo),
+        out_shape=jax.ShapeDtypeStruct((H, W), x.dtype),
+        grid=(H // bm,),
+        in_specs=[
+            pl.BlockSpec(
+                (Element(bm + 2 * K), Element(Wp)),
+                lambda i: (i * bm, 0),
+            ),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, W), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x, coeffs)

@@ -1,0 +1,114 @@
+"""Public jit'd wrappers for the Pallas kernels: padding, block sizing, VMEM
+budgeting, and interpret-mode selection (interpret on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import chain2d as _chain2d
+from . import stencil2d as _stencil2d
+from . import stencil3d as _stencil3d
+
+# Conservative VMEM working-set budget per block (bytes): v5e has ~128 MiB
+# VMEM; with double-buffered input+output blocks keep each block well under.
+_VMEM_BUDGET = 4 << 20
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block_rows(h_rows: int, row_bytes: int, halo: int, budget: int) -> int:
+    """Largest power-of-two row count whose window fits the VMEM budget."""
+    bm = 1 << int(np.log2(max(1, budget // max(1, row_bytes))))
+    bm = max(8, min(bm, 512))
+    while bm > 8 and (bm + 2 * halo) * row_bytes > budget:
+        bm //= 2
+    return bm
+
+
+def _pad_rows(x: jax.Array, interior: int, halo: int, bm: int, axis: int = 0):
+    """Pad the interior row count to a multiple of bm (zeros; discarded)."""
+    rem = interior % bm
+    if rem == 0:
+        return x, interior
+    pad = bm - rem
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), interior + pad
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _stencil2d_jit(x, coeffs, block_rows, interpret):
+    H = x.shape[0] - 2
+    xp, Hp = _pad_rows(x, H, 1, block_rows)
+    out = _stencil2d.stencil2d_pallas(
+        xp, coeffs, block_rows=block_rows, interpret=interpret
+    )
+    return out[:H]
+
+
+def stencil2d(x, coeffs, *, block_rows: Optional[int] = None,
+              interpret: Optional[bool] = None):
+    """5-point stencil sweep. x: (H+2, W+2) padded; returns (H, W)."""
+    x = jnp.asarray(x)
+    coeffs = jnp.asarray(coeffs, dtype=jnp.float32)
+    H, Wp = x.shape[0] - 2, x.shape[1]
+    if block_rows is None:
+        block_rows = _pick_block_rows(H, Wp * x.dtype.itemsize, 1, _VMEM_BUDGET)
+    block_rows = min(block_rows, H)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _stencil2d_jit(x, coeffs, block_rows, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_z", "interpret"))
+def _stencil3d_jit(x, coeffs, block_z, interpret):
+    D = x.shape[0] - 2
+    xp, Dp = _pad_rows(x, D, 1, block_z)
+    out = _stencil3d.stencil3d_pallas(xp, coeffs, block_z=block_z, interpret=interpret)
+    return out[:D]
+
+
+def stencil3d(x, coeffs, *, block_z: Optional[int] = None,
+              interpret: Optional[bool] = None):
+    """7-point stencil sweep. x: (D+2, H+2, W+2) padded; returns (D, H, W)."""
+    x = jnp.asarray(x)
+    coeffs = jnp.asarray(coeffs, dtype=jnp.float32)
+    D = x.shape[0] - 2
+    plane_bytes = x.shape[1] * x.shape[2] * x.dtype.itemsize
+    if block_z is None:
+        block_z = _pick_block_rows(D, plane_bytes, 1, _VMEM_BUDGET)
+    block_z = min(block_z, D)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _stencil3d_jit(x, coeffs, block_z, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "block_rows", "interpret"))
+def _chain2d_jit(x, coeffs, steps, block_rows, interpret):
+    H = x.shape[0] - 2 * steps
+    xp, Hp = _pad_rows(x, H, steps, block_rows)
+    out = _chain2d.chain2d_pallas(
+        xp, coeffs, steps=steps, block_rows=block_rows, interpret=interpret
+    )
+    return out[:H]
+
+
+def chain2d(x, coeffs, steps: int, *, block_rows: Optional[int] = None,
+            interpret: Optional[bool] = None):
+    """K fused 5-point sweeps. x: (H+2K, W+2K) padded; returns (H, W)."""
+    x = jnp.asarray(x)
+    coeffs = jnp.asarray(coeffs, dtype=jnp.float32)
+    H, Wp = x.shape[0] - 2 * steps, x.shape[1]
+    if block_rows is None:
+        block_rows = _pick_block_rows(H, Wp * x.dtype.itemsize, steps, _VMEM_BUDGET)
+    block_rows = min(block_rows, H)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _chain2d_jit(x, coeffs, steps, block_rows, interpret)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stencil2d_ref(x: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """5-point star on (H+2, W+2) padded input -> (H, W)."""
+    u = x.astype(jnp.float32)
+    c0, cx, cy = coeffs[0], coeffs[1], coeffs[2]
+    out = (
+        c0 * u[1:-1, 1:-1]
+        + cx * (u[:-2, 1:-1] + u[2:, 1:-1])
+        + cy * (u[1:-1, :-2] + u[1:-1, 2:])
+    )
+    return out.astype(x.dtype)
+
+
+def stencil3d_ref(x: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """7-point star on (D+2, H+2, W+2) padded input -> (D, H, W)."""
+    u = x.astype(jnp.float32)
+    c0, cz, cx, cy = coeffs[0], coeffs[1], coeffs[2], coeffs[3]
+    out = (
+        c0 * u[1:-1, 1:-1, 1:-1]
+        + cz * (u[:-2, 1:-1, 1:-1] + u[2:, 1:-1, 1:-1])
+        + cx * (u[1:-1, :-2, 1:-1] + u[1:-1, 2:, 1:-1])
+        + cy * (u[1:-1, 1:-1, :-2] + u[1:-1, 1:-1, 2:])
+    )
+    return out.astype(x.dtype)
+
+
+def chain2d_ref(x: jax.Array, coeffs: jax.Array, steps: int) -> jax.Array:
+    """K sequential full-grid 5-point sweeps on (H+2K, W+2K) input -> (H, W).
+
+    Float32 accumulation throughout (matching the kernel), cast at the end.
+    """
+    u = x.astype(jnp.float32)
+    c0, cx, cy = coeffs[0], coeffs[1], coeffs[2]
+    for _ in range(steps):
+        u = (
+            c0 * u[1:-1, 1:-1]
+            + cx * (u[:-2, 1:-1] + u[2:, 1:-1])
+            + cy * (u[1:-1, :-2] + u[1:-1, 2:])
+        )
+    return u.astype(x.dtype)

@@ -1,0 +1,2 @@
+"""Launch layer: production mesh construction, dry-run driver, train/serve
+entry points."""

@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell — the dry-run's
+inputs.  Weak-type-correct, shardable, zero allocation.
+
+Modality frontends are STUBS per the assignment: whisper gets precomputed
+frame embeddings (B, S, d); internvl gets 256 patch embeddings that occupy
+the first sequence positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.transformer import init_cache, init_params
+from ..train.optimizer import adamw_init
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs_sds(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for train/prefill cells."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, S), jnp.int32)}
+    if shape.is_train:
+        batch["labels"] = sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        batch["patches"] = sds((B, cfg.vision_patches, cfg.d_model), cfg.jdtype)
+    if cfg.encdec:
+        batch["enc_inputs"] = sds((B, S, cfg.d_model), cfg.jdtype)
+    return batch
+
+
+def params_sds(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def opt_state_sds(params):
+    return jax.eval_shape(adamw_init, params)
+
+
+def cache_sds(cfg: ModelConfig, shape: ShapeConfig):
+    """Serving cache at full context length (decode cells)."""
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        lambda: init_cache(cfg, B, S, enc_len=S if cfg.encdec else 0))
+
+
+def decode_tokens_sds(shape: ShapeConfig):
+    return sds((shape.global_batch,), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Everything the cell's step function consumes, as ShapeDtypeStructs."""
+    params = params_sds(cfg)
+    if shape.kind == "train":
+        return {
+            "params": params,
+            "opt_state": opt_state_sds(params),
+            "batch": batch_specs_sds(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch_specs_sds(cfg, shape)}
+    # decode
+    return {
+        "params": params,
+        "cache": cache_sds(cfg, shape),
+        "tokens": decode_tokens_sds(shape),
+    }

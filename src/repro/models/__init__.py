@@ -1,0 +1,7 @@
+"""LM-family model substrate: composable JAX transformer/SSM stack covering
+the ten assigned architectures (dense / GQA / MLA / MoE / SSM / hybrid /
+enc-dec / VLM-backbone), with train_step and serve_step entry points."""
+from .config import ModelConfig
+from .transformer import init_params, forward, decode_step, loss_fn
+
+__all__ = ["ModelConfig", "init_params", "forward", "decode_step", "loss_fn"]

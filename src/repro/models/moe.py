@@ -1,0 +1,108 @@
+"""Mixture-of-Experts layer with capacity-based top-k routing and optional
+expert parallelism via ``all_to_all`` over the mesh's model axis.
+
+Dispatch is top-C-per-expert (lax.top_k over the (E, T) routing matrix),
+which bounds per-expert work exactly like GShard capacity but without the
+(T, E, C) one-hot einsum — the dispatch tensors here are (E, C, d) gathers,
+small enough to live per-shard at 32k tokens.  With expert parallelism the
+buckets round-trip through two all_to_alls over the model axis (the standard
+EP schedule); without a mesh the same code runs locally (M = 1).
+
+Dropped tokens (beyond capacity) fall through with the residual connection,
+as in GShard/Switch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def router_probs(x: jax.Array, w_router: jax.Array) -> jax.Array:
+    """(B,S,d) x (d,E) -> (T,E) float32 softmax probabilities."""
+    t = x.reshape(-1, x.shape[-1])
+    logits = t.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def load_balance_loss(probs: jax.Array, topk_idx: jax.Array, num_experts: int) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    T = probs.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.float32)
+    counts = counts.at[topk_idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(topk_idx.size, 1)
+    p = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def moe_ffn(
+    params: Dict,
+    x: jax.Array,
+    cfg,
+    *,
+    axis: Optional[str] = None,
+    axis_size: int = 1,
+) -> jax.Array:
+    """Top-k routed expert FFN.  ``x``: (B, S, d) (local shard if under
+    shard_map).  ``params['experts']`` leaves have leading dim = local expert
+    count (E / axis_size when sharded)."""
+    B, S, d = x.shape
+    E = cfg.num_experts
+    k = cfg.experts_per_token
+    tokens = x.reshape(-1, d)
+    T = tokens.shape[0]
+
+    logits = tokens.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    topk_p, topk_idx = lax.top_k(probs, k)                   # (T, k)
+    if cfg.norm_topk:
+        topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+
+    # (E, T) routing matrix: weight if token routed to e else -1.
+    routed = jnp.full((T, E), -1.0, jnp.float32)
+    routed = routed.at[jnp.arange(T)[:, None], topk_idx].set(topk_p)
+    routing = routed.T                                        # (E, T)
+
+    C = int(cfg.capacity_factor * T * k / E) + 1
+    C = min(max(4, C), T)
+    gate_w, tok_idx = lax.top_k(routing, C)                  # (E, C)
+    valid = gate_w > 0.0
+    gate_w = jnp.where(valid, gate_w, 0.0)
+
+    xe = tokens[tok_idx] * valid[..., None].astype(tokens.dtype)  # (E, C, d)
+
+    if axis is not None and axis_size > 1:
+        M = axis_size
+        ep = E // M
+        # (E, C, d) -> (M, ep, C, d) -> exchange shard<->expert-group.
+        xe = xe.reshape(M, ep, C, d)
+        xe = lax.all_to_all(xe, axis, split_axis=0, concat_axis=0, tiled=False)
+        # now (M, ep, C, d) where dim0 = source shard; merge into capacity.
+        xe = xe.transpose(1, 0, 2, 3).reshape(ep, M * C, d)
+    else:
+        ep = E
+
+    # expert swiglu over stacked local experts
+    wg, wu, wd = params["experts"]["w_gate"], params["experts"]["w_up"], params["experts"]["w_down"]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum("ecd,edf->ecf", xe, wu)
+    ye = jnp.einsum("ecf,efd->ecd", h, wd)                   # (ep, C', d)
+
+    if axis is not None and axis_size > 1:
+        M = axis_size
+        ye = ye.reshape(ep, M, C, d).transpose(1, 0, 2, 3)    # (M, ep, C, d)
+        ye = lax.all_to_all(ye, axis, split_axis=0, concat_axis=0, tiled=False)
+        ye = ye.reshape(E, C, d)
+
+    out = jnp.zeros((T, d), ye.dtype)
+    out = out.at[tok_idx.reshape(-1)].add(
+        (ye * gate_w[..., None].astype(ye.dtype)).reshape(-1, d)
+    )
+
+    if cfg.num_shared_experts:
+        ws = params["shared"]
+        hs = jax.nn.silu(tokens @ ws["w_gate"]) * (tokens @ ws["w_up"])
+        out = out + hs @ ws["w_down"]
+
+    return out.reshape(B, S, d).astype(x.dtype)

@@ -1,0 +1,150 @@
+"""Out-of-core LM serving: layer-weight streaming (the paper's Algorithm 1
+applied to transformer weights).
+
+Mapping from the stencil setting (DESIGN.md §4):
+  loop chain      -> the layer stack (executed in order, every step)
+  dataset         -> one layer's weight slice
+  fast memory     -> device HBM;  slow memory -> host DRAM (pinned_host)
+  3 slots         -> device-resident rings of ``window`` layer slices
+  read-only opt   -> weights NEVER download (they are read-only)
+  write-first opt -> activations/caches never upload (born on device)
+  prefetch        -> layer l+1's weights upload while layer l computes; and
+                     the next *step*'s layer-0 weights upload during the last
+                     layer of this step (the paper's cross-chain speculative
+                     prefetch — here the next chain provably looks the same,
+                     so it always hits)
+
+JAX's async dispatch provides the overlap: ``device_put`` of slice l+1 is
+issued before layer l's compute is consumed, so the copy runs behind the
+matmuls exactly like stream 1 behind stream 0.  The ledger models the link
+occupancy to report the achievable overlap on the TPU constants.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.memory import HardwareModel, TPU_V5E, TransferLedger
+from .config import ModelConfig
+from .transformer import decode_step, init_cache
+
+
+def _layer_bytes(host_blocks, li: int) -> int:
+    return int(sum(np.asarray(l[li]).nbytes for l in jax.tree.leaves(host_blocks)))
+
+
+def _slice_layer(host_blocks, li: int):
+    return jax.tree.map(lambda l: jnp.asarray(l[li]), host_blocks)
+
+
+@dataclass
+class StreamStats:
+    uploaded_bytes: int = 0
+    steps: int = 0
+    modelled_step_s: float = 0.0
+    compute_bound_fraction: float = 0.0
+
+
+class LayerStreamer:
+    """Runs decode steps for a model whose layer weights live in host memory.
+
+    ``params`` must be the standard tree; stacked ``blocks`` leaves are kept
+    as host numpy (slow memory).  Non-layer params (embeddings, norms, head)
+    stay device-resident — they are used every step (the paper keeps
+    frequently-reused data in fast memory, cf. Heinecke et al. in §2).
+    """
+
+    def __init__(self, params: Dict, cfg: ModelConfig, *, window: int = 3,
+                 hw: HardwareModel = TPU_V5E,
+                 flops_per_layer_per_token: Optional[float] = None):
+        self.cfg = cfg
+        self.window = max(2, window)
+        self.hw = hw
+        self.host_blocks = jax.tree.map(np.asarray, params["blocks"])
+        self.resident = {k: v for k, v in params.items() if k != "blocks"}
+        self.L = cfg.num_layers
+        self._ring: Dict[int, Any] = {}
+        self.ledger = TransferLedger(hw)
+        self.stats = StreamStats()
+        self._flops_per_layer_token = flops_per_layer_per_token or (
+            2.0 * cfg.active_param_count() / max(cfg.num_layers, 1))
+
+    # -- slot management ---------------------------------------------------------
+    def _fetch(self, li: int):
+        if li in self._ring:
+            return self._ring[li]
+        sl = _slice_layer(self.host_blocks, li)
+        self._ring[li] = sl
+        self.stats.uploaded_bytes += _layer_bytes(self.host_blocks, li)
+        while len(self._ring) > self.window:
+            # evict the slice furthest BEHIND the current layer in ring
+            # order (so a speculatively-prefetched layer 0 survives the
+            # tail of the previous step); read-only => discard, never
+            # download (§4.1).
+            stalest = max((k for k in self._ring if k != li),
+                          key=lambda k: (li - k) % self.L)
+            del self._ring[stalest]
+        return sl
+
+class StreamedDecoder(LayerStreamer):
+    """Streamed decode for the dense/vlm families (llama-style blocks).
+
+    At most ``window`` layer slices are device-resident at any point; slice
+    l+1's host->device copy is ISSUED before layer l's compute is consumed
+    (JAX async dispatch = stream-1-behind-stream-0 overlap).  Math is
+    identical to ``decode_step`` (validated in tests/test_offload.py).
+    """
+
+    def decode(self, cache: Dict, tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+        from .layers import rms_norm
+        from .transformer import _decode_attn, _mlp_sublayer
+
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm"), "streamed decode: dense families"
+        cur = cache["len"]
+        batch = tokens.shape[0]
+        h = self.resident["embed"][tokens][:, None, :]
+        self._fetch(0)
+        ks, vs = [], []
+        for li in range(self.L):
+            if li + 1 < self.L:
+                self._fetch(li + 1)          # prefetch next layer (stream 1)
+            blk = self._ring[li]
+            h, kc, vc = _decode_attn(blk, h, cfg, cache["k"][li], cache["v"][li], cur)
+            h = _mlp_sublayer(blk, h, cfg)
+            ks.append(kc)
+            vs.append(vc)
+        # speculative prefetch for the NEXT step's first layer (§4.1): the
+        # next chain is the same layer stack, so this always hits.
+        self._fetch(0)
+        h = rms_norm(h, self.resident["final_norm"], cfg.rms_eps)
+        head = (self.resident["embed"].T if cfg.tie_embeddings
+                else self.resident["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0, :]
+        new_cache = dict(cache)
+        new_cache["k"] = jnp.stack(ks)
+        new_cache["v"] = jnp.stack(vs)
+        new_cache["len"] = cur + 1
+
+        # ledger: model the overlapped schedule on the target hardware
+        t_cmp_layer = self._flops_per_layer_token * batch / self.hw.flops
+        up_eid = cmp_eid = None
+        for li in range(self.L):
+            nb = _layer_bytes(self.host_blocks, li)
+            deps = tuple(e for e in (up_eid,) if e is not None)
+            up_eid = self.ledger.add(1, "upload", nb, self.ledger.t_up(nb), deps)
+            cdeps = [up_eid] + ([cmp_eid] if cmp_eid is not None else [])
+            cmp_eid = self.ledger.add(0, "compute", 0, t_cmp_layer, tuple(cdeps))
+        self.stats.steps += 1
+        self.stats.modelled_step_s = self.ledger.simulate() / self.stats.steps
+        return logits, new_cache
+
+    def device_resident_bytes(self) -> int:
+        """Max weight bytes on device at any time (the out-of-core claim)."""
+        return self.window * max(
+            _layer_bytes(self.host_blocks, li) for li in range(self.L))

@@ -1,0 +1,169 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked matmul-form scan.
+
+The SSD algorithm is the TPU-friendly formulation of the selective scan: the
+sequence is cut into chunks of Q tokens; within a chunk attention-like
+(Q x Q) semiseparable matmuls run on the MXU, and an (state x headdim) chunk
+state is relayed across chunks by a short ``lax.scan`` — structurally the
+same "tile + carried edge" pattern as the paper's skewed tiling, one reason
+this arch pairs naturally with the repo (DESIGN.md §4).
+
+Decode is the O(1) recurrent update on the (heads, headdim, state) state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _depthwise_causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (K, C) depthwise causal conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):  # K = 4: unrolled taps fuse into one VPU pass
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[K - 1 - i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def ssd_chunked(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H) — post-softplus
+    A: jax.Array,     # (H,) negative
+    Bm: jax.Array,    # (B, S, N)  (ngroups = 1, broadcast over heads)
+    Cm: jax.Array,    # (B, S, N)
+    D: jax.Array,     # (H,)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def per_chunk(state, inp):
+        xq, dtq, bq, cq = inp                     # (B,Q,H,P),(B,Q,H),(B,Q,N),(B,Q,N)
+        dA = dtq * Af[None, None, :]              # (B,Q,H)
+        cs = jnp.cumsum(dA, axis=1)               # (B,Q,H) inclusive
+        total = cs[:, -1, :]                      # (B,H)
+        # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j   (B,H,Q,Q).
+        # Mask BEFORE the exp: for i < j the exponent is positive and large,
+        # and where(tri, exp(seg), 0) would leak inf into the backward pass.
+        seg = cs[:, :, None, :] - cs[:, None, :, :]          # (B,Qi,Qj,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        Lmat = jnp.exp(jnp.where(tri, seg, -60.0)) * tri.astype(jnp.float32)
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)          # (B,Qi,Qj)
+        W = scores[:, :, :, None] * Lmat * dtq[:, None, :, :]  # (B,Qi,Qj,H)
+        y_diag = jnp.einsum("bijh,bjhp->bihp", W, xq)
+        # inter-chunk: contribution of carried state
+        y_off = jnp.einsum("bin,bhpn->bihp", cq, state) * jnp.exp(cs)[..., None]
+        # new chunk state
+        decay_to_end = jnp.exp(total[:, None, :] - cs)       # (B,Q,H)
+        Sc = jnp.einsum("bjn,bjh,bjhp->bhpn", bq, dtq * decay_to_end, xq)
+        state_new = state * jnp.exp(total)[:, :, None, None] + Sc
+        y = y_diag + y_off + xq * D[None, None, :, None]
+        return state_new, y
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), jnp.float32))
+    final_state, yc = lax.scan(per_chunk, s0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, H, P, N)
+    x: jax.Array,      # (B, H, P)
+    dt: jax.Array,     # (B, H)
+    A: jax.Array,      # (H,)
+    Bm: jax.Array,     # (B, N)
+    Cm: jax.Array,     # (B, N)
+    D: jax.Array,      # (H,)
+) -> Tuple[jax.Array, jax.Array]:
+    """O(1) recurrent update; returns (y (B,H,P), new_state)."""
+    xf = x.astype(jnp.float32)
+    dA = jnp.exp(dt.astype(jnp.float32) * A[None, :])            # (B,H)
+    dBx = jnp.einsum("bn,bhp->bhpn", Bm.astype(jnp.float32),
+                     dt.astype(jnp.float32)[..., None] * xf)
+    state_new = state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state_new, Cm.astype(jnp.float32))
+    y = y + xf * D[None, :, None]
+    return y.astype(x.dtype), state_new
+
+
+def mamba2_forward(
+    params: Dict,
+    x: jax.Array,          # (B, S, d)
+    cfg,
+    init_state: Optional[jax.Array] = None,
+    conv_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full Mamba-2 mixer over a sequence; returns (out, final_ssm_state)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = x @ params["in_proj"]                               # (B,S,2di+2N+H)
+    z, xs, B_, C_, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)             # (B,S,di+2N)
+    conv = _depthwise_causal_conv(conv_in, params["conv_w"]) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs, B_, C_ = jnp.split(conv, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    Bsz, S = x.shape[0], x.shape[1]
+    y, state = ssd_chunked(
+        xs.reshape(Bsz, S, H, P), dt, A, B_, C_, params["d_skip"],
+        cfg.ssm_chunk, init_state,
+    )
+    y = y.reshape(Bsz, S, di)
+    y = y * jax.nn.silu(z)
+    # grouped RMS norm (mamba2's norm before out-proj)
+    from .layers import rms_norm
+    y = rms_norm(y, params["norm"], cfg.rms_eps)
+    return y @ params["out_proj"], state
+
+
+def mamba2_decode(
+    params: Dict,
+    x: jax.Array,          # (B, d) single token
+    cfg,
+    ssm_state: jax.Array,  # (B, H, P, N)
+    conv_state: jax.Array, # (B, K-1, di+2N) rolling window of past conv inputs
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token step; returns (out (B,d), ssm_state', conv_state')."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    K = cfg.ssm_conv
+    zxbcdt = x @ params["in_proj"]                               # (B,2di+2N+H)
+    z, xs, B_, C_, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)             # (B, di+2N)
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)  # (B,K,·)
+    # Tap order must mirror _depthwise_causal_conv: w[0] multiplies the
+    # CURRENT sample, w[K-1] the oldest — window is oldest-first, so flip.
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      params["conv_w"][::-1].astype(jnp.float32)) + params["conv_b"]
+    conv = jax.nn.silu(conv).astype(x.dtype)
+    xs, B_, C_ = jnp.split(conv, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, ssm_state = ssd_decode_step(
+        ssm_state, xs.reshape(-1, H, P), dt, A, B_, C_, params["d_skip"])
+    y = y.reshape(-1, di) * jax.nn.silu(z)
+    from .layers import rms_norm
+    y = rms_norm(y, params["norm"], cfg.rms_eps)
+    return y @ params["out_proj"], ssm_state, window[:, 1:, :]

@@ -1,0 +1,8 @@
+"""Training substrate: optimizer, data pipeline, checkpointing, train step."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .step import make_train_step
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+    "make_train_step",
+]

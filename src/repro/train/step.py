@@ -1,0 +1,102 @@
+"""The jitted train_step / serve_step factories used by the launcher AND the
+dry-run (same code path — what compiles in the dry-run is what trains).
+
+Features:
+  * gradient accumulation (microbatching) via lax.scan over the batch split,
+  * optional int8-compressed gradient all-reduce over the pod (DCN) axis,
+  * remat (activation checkpointing) through the model's layer scan,
+  * AdamW with ZeRO state sharding inherited from param specs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..distributed.compression import make_pod_grad_allreduce
+from ..models import loss_fn
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    mesh: Optional[Mesh] = None,
+    *,
+    microbatches: int = 1,
+    compress_pod_grads: bool = False,
+    remat: bool = True,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    pod_reduce = (make_pod_grad_allreduce(mesh, compress=True)
+                  if (compress_pod_grads and mesh is not None) else None)
+
+    def compute_grads(params, batch):
+        def lf(p, b):
+            return loss_fn(
+                p, cfg, b["tokens"], b["labels"],
+                patches=b.get("patches"), enc_inputs=b.get("enc_inputs"),
+                mesh=mesh, remat=remat,
+            )
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(lf)(params, batch)
+            return loss, grads
+        # split batch dim into microbatches and accumulate
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        mb = {k: split(v) for k, v in batch.items()}
+
+        def body(carry, mbatch):
+            acc_loss, acc_g = carry
+            loss, g = jax.value_and_grad(lf)(params, mbatch)
+            acc_g = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), acc_g, g)
+            return (acc_loss + loss, acc_g), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(body, (jnp.float32(0), zero_g), mb)
+        inv = 1.0 / microbatches
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        if pod_reduce is not None:
+            grads = pod_reduce(grads)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None) -> Callable:
+    """Returns serve_step(params, cache, tokens) -> (logits, cache)."""
+    from ..models import decode_step
+
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens, mesh=mesh)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None) -> Callable:
+    """Returns prefill(params, batch) -> last-position logits.
+
+    (Cache materialisation for decode is exercised separately by serve_step —
+    the prefill cell measures the full-sequence forward cost.)
+    """
+    from ..models import forward
+
+    def prefill(params, batch):
+        logits = forward(
+            params, cfg, batch["tokens"],
+            patches=batch.get("patches"), enc_inputs=batch.get("enc_inputs"),
+            mesh=mesh, remat=False,
+        )
+        return logits[:, -1, :]
+
+    return prefill

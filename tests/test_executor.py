@@ -1,0 +1,151 @@
+"""Integration + property tests: out-of-core executor == reference oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Arg, Block, INC, OOCConfig, OutOfCoreExecutor, ParallelLoop, READ,
+    ReductionSpec, ReferenceRuntime, ResidentExecutor, RW, Runtime, WRITE,
+    make_dataset, offset_stencil, point_stencil, star_stencil,
+)
+
+
+def heat_app(runtime, n, m, steps, halo=1):
+    rng = np.random.RandomState(7)
+    blk = Block("grid", (n, m))
+    u = make_dataset(blk, "u", halo=halo, init=rng.rand(n, m).astype(np.float32))
+    tmp = make_dataset(blk, "tmp", halo=halo)
+    S = star_stencil(2, 1)
+    Z = point_stencil(2)
+    interior = ((1, n - 1), (1, m - 1))
+    for s in range(steps):
+        runtime.par_loop(
+            f"avg{s}", blk, interior, [Arg(u, S, READ), Arg(tmp, Z, WRITE)],
+            lambda acc: {"tmp": 0.25 * (acc("u", (1, 0)) + acc("u", (-1, 0))
+                                         + acc("u", (0, 1)) + acc("u", (0, -1)))})
+        runtime.par_loop(
+            f"copy{s}", blk, interior, [Arg(tmp, Z, READ), Arg(u, Z, RW)],
+            lambda acc: {"u": acc("tmp")})
+    runtime.par_loop(
+        "sum", blk, interior, [Arg(u, Z, READ)],
+        lambda acc: {"total": jnp.sum(acc("u"))},
+        reductions=[ReductionSpec("total", "sum")])
+    total = runtime.reduction("total")
+    return runtime.fetch(u), total
+
+
+class TestEquivalence:
+    @pytest.mark.parametrize("tiles,cyclic,prefetch", [
+        (1, False, False), (3, False, False), (5, True, True), (7, True, False),
+    ])
+    def test_heat_matches_reference(self, tiles, cyclic, prefetch):
+        ref_u, ref_t = heat_app(ReferenceRuntime(), 40, 24, 4)
+        ex = OutOfCoreExecutor(OOCConfig(
+            num_tiles=tiles, capacity_bytes=float("inf"),
+            cyclic=cyclic, prefetch=prefetch))
+        got_u, got_t = heat_app(Runtime(ex), 40, 24, 4)
+        np.testing.assert_allclose(ref_u, got_u, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(ref_t, got_t, rtol=1e-4)
+
+    def test_capacity_forces_tiling(self):
+        ref_u, _ = heat_app(ReferenceRuntime(), 64, 16, 2)
+        # capacity < 3 full-size slots -> executor must pick tiles > 1
+        # (full footprint per slot here is 9072B; 3 slots need 27216B)
+        ex = OutOfCoreExecutor(OOCConfig(capacity_bytes=24000))
+        got_u, _ = heat_app(Runtime(ex), 64, 16, 2)
+        assert ex.history[0].num_tiles > 1
+        np.testing.assert_allclose(ref_u, got_u, rtol=1e-5, atol=1e-6)
+
+    def test_resident_executor_raises_beyond_capacity(self):
+        ex = ResidentExecutor(capacity_bytes=1024)  # absurdly small
+        with pytest.raises(MemoryError):
+            heat_app(Runtime(ex), 32, 16, 1)
+
+    def test_transfer_elision_reduces_bytes(self):
+        """cyclic ON must move strictly fewer bytes down, same result."""
+        ex_off = OutOfCoreExecutor(OOCConfig(num_tiles=4, capacity_bytes=float("inf")))
+        u_off, _ = heat_app(Runtime(ex_off), 40, 24, 4)
+        ex_on = OutOfCoreExecutor(OOCConfig(num_tiles=4, capacity_bytes=float("inf"),
+                                            cyclic=True))
+        u_on, _ = heat_app(Runtime(ex_on), 40, 24, 4)
+        np.testing.assert_allclose(u_off, u_on, rtol=1e-5, atol=1e-6)
+        assert ex_on.history[0].downloaded < ex_off.history[0].downloaded
+
+    def test_inc_mode(self):
+        blk = Block("g", (16, 8))
+        a = make_dataset(blk, "a", halo=0, init=np.ones((16, 8), np.float32))
+        Z = point_stencil(2)
+        rt_ref = ReferenceRuntime()
+        rt_ref.par_loop("inc", blk, blk.full_range(), [Arg(a, Z, INC)],
+                        lambda acc: {"a": jnp.full(acc.shape, 2.0)})
+        ref = rt_ref.fetch(a)
+        b = make_dataset(blk, "a", halo=0, init=np.ones((16, 8), np.float32))
+        rt = Runtime(OutOfCoreExecutor(OOCConfig(num_tiles=3, capacity_bytes=float("inf"))))
+        rt.par_loop("inc", blk, blk.full_range(), [Arg(b, Z, INC)],
+                    lambda acc: {"a": jnp.full(acc.shape, 2.0)})
+        got = rt.fetch(b)
+        np.testing.assert_allclose(ref, got)
+        assert float(ref[0, 0]) == 3.0
+
+
+# -- property-based: random chains, random tiling == reference -------------------
+@st.composite
+def random_chain_spec(draw):
+    n = draw(st.integers(16, 48))
+    m = draw(st.integers(6, 14))
+    n_loops = draw(st.integers(1, 6))
+    ops = draw(st.lists(st.sampled_from(["blur", "shift", "copyback", "scale"]),
+                        min_size=n_loops, max_size=n_loops))
+    tiles = draw(st.integers(1, 7))
+    seed = draw(st.integers(0, 2 ** 16))
+    return n, m, ops, tiles, seed
+
+
+def _build(ops, blk, u, tmp):
+    S = star_stencil(2, 1)
+    Z = point_stencil(2)
+    n, m = blk.size
+    interior = ((1, n - 1), (1, m - 1))
+    loops = []
+    for i, kind in enumerate(ops):
+        if kind == "blur":
+            loops.append((f"blur{i}", interior,
+                          [Arg(u, S, READ), Arg(tmp, Z, WRITE)],
+                          lambda acc: {"tmp": 0.2 * (acc("u") + acc("u", (1, 0))
+                                                     + acc("u", (-1, 0)) + acc("u", (0, 1))
+                                                     + acc("u", (0, -1)))}))
+        elif kind == "shift":
+            loops.append((f"shift{i}", interior,
+                          [Arg(u, offset_stencil((0, 0), (1, 1)), READ),
+                           Arg(tmp, Z, WRITE)],
+                          lambda acc: {"tmp": acc("u", (1, 1)) * 0.5 + acc("u")}))
+        elif kind == "copyback":
+            loops.append((f"cb{i}", interior,
+                          [Arg(tmp, Z, READ), Arg(u, Z, RW)],
+                          lambda acc: {"u": acc("tmp") + 0.1 * acc("u")}))
+        else:
+            loops.append((f"scale{i}", interior,
+                          [Arg(u, Z, RW)], lambda acc: {"u": acc("u") * 0.9}))
+    return loops
+
+
+@given(random_chain_spec())
+@settings(max_examples=15, deadline=None)
+def test_random_chains_match_reference(spec):
+    n, m, ops, tiles, seed = spec
+    rng = np.random.RandomState(seed)
+    init = rng.rand(n, m).astype(np.float32)
+
+    results = []
+    for runtime_kind in ("ref", "ooc"):
+        blk = Block("g", (n, m))
+        u = make_dataset(blk, "u", halo=1, init=init)
+        tmp = make_dataset(blk, "tmp", halo=1)
+        rt = (ReferenceRuntime() if runtime_kind == "ref"
+              else Runtime(OutOfCoreExecutor(OOCConfig(
+                  num_tiles=tiles, capacity_bytes=float("inf")))))
+        for name, rng_, args, kern in _build(ops, blk, u, tmp):
+            rt.par_loop(name, blk, rng_, args, kern)
+        results.append(rt.fetch(u))
+    np.testing.assert_allclose(results[0], results[1], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,119 @@
+"""Per-arch smoke tests (reduced configs, CPU): forward/train-step/decode —
+shapes + finiteness; plus algorithmic equivalence tests (SSD, MLA, flash)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config, shape_cells
+from repro.models import decode_step, forward, init_params, loss_fn
+from repro.models.transformer import init_cache
+from repro.train import AdamWConfig, adamw_init, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 24
+
+
+def _inputs(cfg):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["patches"] = jax.random.normal(KEY, (B, cfg.vision_patches, cfg.d_model))
+    if cfg.encdec:
+        kw["enc_inputs"] = jax.random.normal(KEY, (B, S, cfg.d_model))
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_reduced_config(arch)
+        params = init_params(cfg, KEY)
+        tokens, kw = _inputs(cfg)
+        logits = forward(params, cfg, tokens, **kw)
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    def test_one_train_step(self, arch):
+        cfg = get_reduced_config(arch)
+        params = init_params(cfg, KEY)
+        tokens, kw = _inputs(cfg)
+        labels = jnp.roll(tokens, -1, 1)
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, tokens, labels, **kw))(params)
+        assert np.isfinite(float(loss))
+        state = adamw_init(params)
+        new_params, state, metrics = adamw_update(
+            params, grads, state, AdamWConfig(peak_lr=1e-3, warmup_steps=1))
+        assert np.isfinite(float(metrics["grad_norm"]))
+        # parameters actually moved
+        moved = jax.tree.reduce(
+            lambda acc, ab: acc + float(jnp.sum(jnp.abs(ab))),
+            jax.tree.map(lambda a, b: (a - b).astype(jnp.float32), params, new_params),
+            0.0)
+        assert moved > 0
+
+    def test_decode_steps(self, arch):
+        cfg = get_reduced_config(arch)
+        params = init_params(cfg, KEY)
+        tokens, kw = _inputs(cfg)
+        cache = init_cache(cfg, B, 8, enc_len=S)
+        if cfg.encdec:
+            cache["enc_k"] = jnp.ones_like(cache["enc_k"]) * 0.01
+            cache["enc_v"] = jnp.ones_like(cache["enc_v"]) * 0.01
+        for t in range(3):
+            logits, cache = decode_step(params, cfg, cache, tokens[:, t])
+            assert logits.shape == (B, cfg.vocab_size)
+            assert np.isfinite(np.asarray(logits, np.float32)).all()
+        assert int(cache["len"]) == 3
+
+
+class TestFullConfigsAnalytic:
+    """Full configs are exercised via the dry-run; here: analytic sanity."""
+
+    @pytest.mark.parametrize("arch,lo,hi", [
+        ("llama3_2_1b", 1.0e9, 1.6e9),
+        ("tinyllama_1_1b", 0.9e9, 1.4e9),
+        # 47B with our uniform SwiGLU substrate; the real granite-34b-code is
+        # GPT-BigCode (2-proj MLP) => 34B.  Noted in DESIGN.md.
+        ("granite_34b", 30e9, 50e9),
+        ("qwen2_5_14b", 12e9, 17e9),
+        ("qwen3_moe_30b_a3b", 26e9, 34e9),
+        ("deepseek_v2_lite_16b", 13e9, 19e9),
+        ("mamba2_1_3b", 1.0e9, 1.7e9),
+        ("zamba2_1_2b", 1.0e9, 1.7e9),
+        ("internvl2_76b", 66e9, 84e9),
+    ])
+    def test_param_counts(self, arch, lo, hi):
+        assert lo <= get_config(arch).param_count() <= hi
+
+    def test_moe_active_params(self):
+        cfg = get_config("qwen3_moe_30b_a3b")
+        assert cfg.active_param_count() < 0.2 * cfg.param_count()
+
+    def test_cells_assignment(self):
+        # 8 archs x 3 shapes + 2 archs x 4 shapes = 32 runnable cells
+        total = sum(len(shape_cells(a)) for a in ARCH_IDS)
+        assert total == 32
+        assert len(shape_cells("mamba2_1_3b")) == 4
+        assert len(shape_cells("llama3_2_1b")) == 3
+
+
+class TestPrefillDecodeConsistency:
+    """Greedy decode after teacher-forced prefill == full forward argmax."""
+
+    @pytest.mark.parametrize("arch", ["llama3_2_1b", "mamba2_1_3b"])
+    def test_incremental_equals_full(self, arch):
+        cfg = get_reduced_config(arch)
+        params = init_params(cfg, KEY)
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab_size)
+        full_logits = forward(params, cfg, tokens)
+        cache = init_cache(cfg, 1, 8)
+        step_logits = []
+        for t in range(8):
+            lg, cache = decode_step(params, cfg, cache, tokens[:, t])
+            step_logits.append(lg)
+        inc = jnp.stack(step_logits, axis=1)
+        np.testing.assert_allclose(np.asarray(full_logits, np.float32),
+                                   np.asarray(inc, np.float32),
+                                   rtol=2e-2, atol=2e-3)

@@ -1,0 +1,44 @@
+"""Out-of-core LM serving (paper's technique on weights): streamed == resident."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.models import decode_step, init_params
+from repro.models.offload import StreamedDecoder
+from repro.models.transformer import init_cache
+
+
+def test_streamed_decode_matches_resident():
+    cfg = get_reduced_config("llama3_2_1b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, T = 2, 6
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+
+    cache_a = init_cache(cfg, B, T)
+    cache_b = init_cache(cfg, B, T)
+    streamer = StreamedDecoder(params, cfg, window=2)
+    for t in range(T):
+        la, cache_a = decode_step(params, cfg, cache_a, tokens[:, t])
+        lb, cache_b = streamer.decode(cache_b, tokens[:, t])
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+    # the out-of-core claim: device-resident weights bounded by the window,
+    # not by the model (2 of 2 layers here, but ratio < full for real L)
+    assert streamer.stats.uploaded_bytes > 0
+    assert streamer.stats.modelled_step_s > 0
+
+
+def test_streaming_window_bounds_memory():
+    cfg = get_reduced_config("llama3_2_1b").with_(num_layers=6)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    streamer = StreamedDecoder(params, cfg, window=2)
+    cache = init_cache(cfg, 1, 4)
+    tok = jnp.zeros((1,), jnp.int32)
+    _, cache = streamer.decode(cache, tok)
+    total = sum(np.asarray(l).nbytes for l in jax.tree.leaves(streamer.host_blocks))
+    assert streamer.device_resident_bytes() < total / 2
+    assert len(streamer._ring) <= 2

@@ -1,0 +1,142 @@
+"""Unit tests: dependency analysis, skew schedule, footprint algebra."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Arg, Block, READ, RW, WRITE, analyze_chain, make_dataset,
+    make_tile_schedule, choose_num_tiles, offset_stencil, point_stencil,
+    star_stencil,
+)
+from repro.core.tiling import Interval
+
+
+def _chain(n=64, m=16, loops=4, radius=1):
+    blk = Block("b", (n, m))
+    u = make_dataset(blk, "u", halo=radius)
+    tmp = make_dataset(blk, "tmp", halo=radius)
+    S = star_stencil(2, radius)
+    Z = point_stencil(2)
+    out = []
+    import jax.numpy as jnp
+
+    for i in range(loops):
+        def k1(acc):
+            return {"tmp": acc("u", (1, 0)) + acc("u", (-1, 0))}
+
+        def k2(acc):
+            return {"u": acc("tmp")}
+
+        from repro.core import ParallelLoop
+        out.append(ParallelLoop(f"a{i}", blk, ((radius, n - radius), (radius, m - radius)),
+                                (Arg(u, S, READ), Arg(tmp, Z, WRITE)), k1))
+        out.append(ParallelLoop(f"b{i}", blk, ((radius, n - radius), (radius, m - radius)),
+                                (Arg(tmp, Z, READ), Arg(u, Z, RW)), k2))
+    return out
+
+
+class TestDependency:
+    def test_classification(self):
+        loops = _chain()
+        info = analyze_chain(loops)
+        assert "tmp" in info.write_first
+        assert "u" in info.modified
+        assert not info.read_only
+        assert info.skew_slope == 1
+
+    def test_cold_reads(self):
+        loops = _chain(radius=2)
+        info = analyze_chain(loops)
+        # u is read at +/-2 around [2, 62) before first being written -> cold
+        assert info.cold["u"][0][0] == 0
+        # tmp is written before any read: no cold rows
+        assert info.cold.get("tmp", []) == []
+
+    def test_written_regions(self):
+        info = analyze_chain(_chain())
+        assert info.written["u"] == [(1, 63)]
+
+
+class TestSchedule:
+    @pytest.mark.parametrize("num_tiles", [1, 2, 3, 5, 8])
+    def test_ranges_partition(self, num_tiles):
+        """Each loop's per-tile sub-ranges exactly partition its range."""
+        loops = _chain()
+        info = analyze_chain(loops)
+        sched = make_tile_schedule(info, num_tiles)
+        for k, lp in enumerate(info.loops):
+            covered = []
+            for tile in sched.tiles:
+                box = tile.loop_ranges[k]
+                if box is not None:
+                    covered.append(box[0])
+            # contiguous, ordered, exactly covering
+            assert covered[0][0] == lp.range_[0][0]
+            assert covered[-1][1] == lp.range_[0][1]
+            for (a0, b0), (a1, b1) in zip(covered, covered[1:]):
+                assert b0 == a1
+
+    def test_skew_monotone(self):
+        """Earlier loops extend further right within a tile (skewing)."""
+        info = analyze_chain(_chain())
+        sched = make_tile_schedule(info, 4)
+        tile = sched.tiles[0]
+        ends = [box[0][1] for box in tile.loop_ranges if box is not None]
+        assert all(e0 >= e1 for e0, e1 in zip(ends, ends[1:]))
+
+    def test_footprint_covers_accesses(self):
+        info = analyze_chain(_chain())
+        sched = make_tile_schedule(info, 4)
+        for tile in sched.tiles:
+            for k, box in enumerate(tile.loop_ranges):
+                if box is None:
+                    continue
+                lp = info.loops[k]
+                for arg in lp.args:
+                    lo, hi = box[0]
+                    if arg.mode.reads:
+                        mn, mx = arg.stencil.extent(0)
+                        lo, hi = lo + mn, hi + mx
+                    blo, bhi = arg.dat.bounds(0)
+                    lo, hi = max(lo, blo), min(hi, bhi)
+                    f = tile.footprint[arg.dat.name]
+                    assert f.lo <= lo and hi <= f.hi
+
+    def test_upload_download_cover_footprint(self):
+        """Per dat: union(uploads) + union(edges-in) == footprint; downloads
+        cover every written row exactly once."""
+        info = analyze_chain(_chain())
+        sched = make_tile_schedule(info, 5)
+        for name in info.datasets:
+            downloaded = []
+            for tile in sched.tiles:
+                for iv in tile.download.get(name, ()):
+                    if not iv.empty:
+                        downloaded.append((iv.lo, iv.hi))
+            downloaded.sort()
+            for (a0, b0), (a1, b1) in zip(downloaded, downloaded[1:]):
+                assert b0 <= a1, "overlapping downloads"
+            if name in info.modified:
+                lo = min(a for a, _ in info.written[name])
+                hi = max(b for _, b in info.written[name])
+                assert downloaded[0][0] <= lo and downloaded[-1][1] >= hi
+
+    def test_choose_num_tiles_fits(self):
+        loops = _chain(n=256)
+        info = analyze_chain(loops)
+        full = make_tile_schedule(info, 1).slot_bytes()
+        nt = choose_num_tiles(info, capacity_bytes=full, num_slots=3)
+        sched = make_tile_schedule(info, nt)
+        assert 3 * sched.slot_bytes() <= full
+        assert nt > 1
+
+
+class TestInterval:
+    def test_difference_two_pieces(self):
+        a, b = Interval(0, 10), Interval(3, 7)
+        assert a.difference(b) == (Interval(0, 3), Interval(7, 10))
+
+    def test_difference_disjoint(self):
+        assert Interval(0, 5).difference(Interval(7, 9)) == (Interval(0, 5),)
+
+    def test_difference_covered(self):
+        assert Interval(3, 5).difference(Interval(0, 9)) == ()
