@@ -18,7 +18,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.apps import CloverLeaf2D, CloverLeaf3D, OpenSBLI
-from repro.core import OOCConfig, OutOfCoreExecutor, P100_NVLINK, P100_PCIE, Runtime
+from repro.core import P100_NVLINK, P100_PCIE, Session
 
 CAPACITY = 8 << 20  # scaled-down 16 GB
 
@@ -69,21 +69,25 @@ def run_one(app_name: str, ratio: float, link: str, *, cyclic: bool,
     hw = base_hw.with_(fast_capacity=CAPACITY, fast_bw=fast_bw, dd_bw=509.7e9)
     nx = _size_for(build, ratio)
     app = build(nx)
-    ex = OutOfCoreExecutor(OOCConfig(hw=hw, prefetch=prefetch, simulate_only=True))
-    rt = Runtime(ex)
+    rt = Session("sim", hw=hw, prefetch=prefetch)
     _drive(app, rt, steps, cyclic)
     # drop the init chain from the bandwidth average (paper measures the
     # cyclic main phase)
-    hist = ex.history[1:] if len(ex.history) > 1 else ex.history
+    hist = rt.history[1:] if len(rt.history) > 1 else rt.history
     tot_b = sum(c.loop_bytes for c in hist)
     tot_t = sum(c.modelled_s for c in hist)
     bw = tot_b / tot_t if tot_t else 0.0
+    plan = rt.plan_stats()
     return {"app": app_name, "ratio": ratio, "link": link, "cyclic": cyclic,
             "prefetch": prefetch, "avg_bw_gbs": bw / 1e9,
             "baseline_gbs": fast_bw / 1e9,
             "efficiency": bw / fast_bw,
-            "tiles": max(c.num_tiles for c in ex.history),
-            "prefetch_hits": sum(c.prefetch_hits for c in ex.history)}
+            "tiles": max(c.num_tiles for c in rt.history),
+            "prefetch_hits": sum(c.prefetch_hits for c in rt.history),
+            "plan_hits": plan["plan_hits"],
+            "plan_misses": plan["plan_misses"],
+            "plan_hit_rate": plan["plan_hit_rate"],
+            "plan_time_s": plan["plan_time_s"]}
 
 
 def run(ratios=(0.5, 1.5, 3.0)) -> List[Dict]:

@@ -23,7 +23,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.apps import CloverLeaf2D, CloverLeaf3D, OpenSBLI
-from repro.core import KNL_7210, ReferenceRuntime
+from repro.core import KNL_7210, Session
 from repro.core.cachesim import simulate_chain
 from repro.core.dependency import analyze_chain
 
@@ -41,7 +41,7 @@ APPS = {
 
 
 def _record_one_step(app) -> List:
-    rt = ReferenceRuntime()
+    rt = Session("reference")
     app.record_init(rt)
     rt.queue.clear()           # init is not part of the measured cyclic phase
     app.dt = 1e-4

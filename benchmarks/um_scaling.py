@@ -13,7 +13,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.apps import CloverLeaf2D, OpenSBLI
-from repro.core import P100_PCIE, ReferenceRuntime
+from repro.core import P100_PCIE, Session
 from repro.core.cachesim import simulate_chain
 
 CAPACITY = 8 << 20
@@ -36,7 +36,7 @@ def _size_for(build, ratio):
 
 
 def _loops(app, tile_steps: int):
-    rt = ReferenceRuntime()
+    rt = Session("reference")
     app.record_init(rt)
     rt.queue.clear()
     app.dt = 1e-4

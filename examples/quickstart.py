@@ -1,50 +1,50 @@
-"""Quickstart: the OPS-style DSL + out-of-core tiled execution in ~60 lines.
+"""Quickstart: the StencilProgram/Session API + out-of-core execution.
 
 A 2-D heat solver whose working set is larger than the configured "fast
-memory": the runtime records the loop chain lazily, analyses dependencies,
-builds a skewed tile schedule, and streams tiles through three slots —
-validated against the eager reference, with the transfer ledger printed.
+memory".  Loops are registered *declaratively*: pass the datasets a kernel
+touches and the runtime traces the kernel's accessor calls to infer every
+READ stencil and access mode — no hand-built ``Arg(dat, stencil, mode)``
+lists.  Backends are selected by name from the registry ("reference",
+"resident", "ooc", "ooc-cyclic", "sim", "pallas"); chain plans (dependency
+analysis + skewed tile schedule + compiled tiles) are memoised, so repeated
+identical chains replay a cached plan.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import (
-    Arg, Block, OOCConfig, OutOfCoreExecutor, READ, RW, ReferenceRuntime,
-    Runtime, TPU_V5E, WRITE, make_dataset, point_stencil, star_stencil,
-)
+from repro.core import Block, Session, TPU_V5E, make_dataset
+from repro.kernels import star2d_kernel
 
 
-def heat(rt, n=512, m=256, steps=8):
+def heat(sess: Session, n=512, m=256, steps=8):
     blk = Block("grid", (n, m))
     rng = np.random.RandomState(0)
     u = make_dataset(blk, "u", halo=1, init=rng.rand(n, m).astype(np.float32))
     tmp = make_dataset(blk, "tmp", halo=1)
-    S, Z = star_stencil(2, 1), point_stencil(2)
     interior = ((1, n - 1), (1, m - 1))
+    # A declared star sweep (the "pallas" backend fast-paths this one) ...
+    diffuse = star2d_kernel("u", "tmp", (0.0, 0.25, 0.25))
+    # ... and a plain accessor kernel — stencils/modes inferred by tracing.
+    commit = lambda acc: {"u": acc("tmp")}
     for s in range(steps):
-        rt.par_loop(f"diffuse{s}", blk, interior,
-                    [Arg(u, S, READ), Arg(tmp, Z, WRITE)],
-                    lambda acc: {"tmp": 0.25 * (acc("u", (1, 0)) + acc("u", (-1, 0))
-                                                 + acc("u", (0, 1)) + acc("u", (0, -1)))})
-        rt.par_loop(f"commit{s}", blk, interior,
-                    [Arg(tmp, Z, READ), Arg(u, Z, RW)],
-                    lambda acc: {"u": acc("tmp")})
-    return rt.fetch(u)  # <- chain breaker: analysis + tiling + execution here
+        sess.par_loop(f"diffuse{s}", blk, interior, [u, tmp], diffuse)
+        sess.par_loop(f"commit{s}", blk, interior, [tmp, u], commit)
+    return sess.fetch(u)  # <- chain breaker: analysis + tiling + execution
 
 
 def main():
-    ref = heat(ReferenceRuntime())
+    ref = heat(Session("reference"))
 
     # fast memory holds only ~1/4 of the problem: out-of-core streaming
     problem_bytes = 2 * 514 * 258 * 4
     hw = TPU_V5E.with_(fast_capacity=problem_bytes // 4)
-    ex = OutOfCoreExecutor(OOCConfig(hw=hw, cyclic=True, prefetch=True))
-    got = heat(Runtime(ex))
+    sess = Session("ooc", hw=hw, cyclic=True, prefetch=True)
+    got = heat(sess)
 
     assert np.allclose(ref, got, atol=1e-5), "out-of-core result mismatch!"
-    st = ex.history[-1]
+    st = sess.history[-1]
+    plan = sess.plan_stats()
     print(f"problem        : {problem_bytes / 1e6:.1f} MB")
     print(f"fast memory    : {hw.fast_capacity / 1e6:.1f} MB  "
           f"(3 slots x {st.slot_bytes / 1e6:.2f} MB used)")
@@ -53,6 +53,9 @@ def main():
           f"downloaded: {st.downloaded / 1e6:.1f} MB")
     print(f"modelled step  : {st.modelled_s * 1e3:.2f} ms  "
           f"-> {st.achieved_bw_model / 1e9:.0f} GB/s achieved (model: {hw.name})")
+    print(f"chain planning : {plan['plan_misses']} analysed, "
+          f"{plan['plan_hits']} cache hits "
+          f"({plan['plan_time_s'] * 1e3:.1f} ms total)")
     print("out-of-core result == reference  [OK]")
 
 

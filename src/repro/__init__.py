@@ -1,0 +1,9 @@
+"""repro — out-of-core stencil runtime in JAX.
+
+Reproduction of "Beyond 16GB: Out-of-Core Stencil Computations", grown into
+a general runtime: OPS-style lazy loop chains, runtime dependency analysis,
+skewed tiling, and streaming out-of-core execution, fronted by the
+``repro.core.Session`` API.
+"""
+
+__version__ = "0.1.0"

@@ -22,14 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
-    INC,
-    READ,
-    RW,
-    WRITE,
-    Arg,
     Block,
     ReductionSpec,
-    Runtime,
+    Session,
     make_dataset,
     offset_stencil,
     point_stencil,
@@ -85,7 +80,7 @@ class CloverLeaf2D:
         return self.dats[name]
 
     # -- initialisation chain ---------------------------------------------------
-    def record_init(self, rt: Runtime, seed: int = 0) -> None:
+    def record_init(self, rt: Session, seed: int = 0) -> None:
         nx, ny = self.nx, self.ny
         blk = self.block
         hx, hy = 2 * np.pi / nx, 2 * np.pi / ny
@@ -105,9 +100,8 @@ class CloverLeaf2D:
 
         rt.par_loop(
             "initialise", blk, self._interior(),
-            [Arg(self.d(n), self.S0, WRITE)
-             for n in ("density0", "energy0", "volume", "xarea", "yarea",
-                        "xvel0", "yvel0")],
+            [self.d(n) for n in ("density0", "energy0", "volume", "xarea",
+                                  "yarea", "xvel0", "yvel0")],
             k_init,
         )
 
@@ -118,9 +112,8 @@ class CloverLeaf2D:
 
         rt.par_loop(
             "zero_fields", blk, self._interior(),
-            [Arg(self.d(n), self.S0, WRITE)
-             for n in ("density1", "energy1", "pressure", "viscosity",
-                        "soundspeed", "xvel1", "yvel1")],
+            [self.d(n) for n in ("density1", "energy1", "pressure",
+                                  "viscosity", "soundspeed", "xvel1", "yvel1")],
             k_zero,
         )
 
@@ -135,9 +128,8 @@ class CloverLeaf2D:
 
         rt.par_loop(
             f"ideal_gas{tag}", self.block, self._interior(),
-            [Arg(self.d(rho_name), self.S0, READ), Arg(self.d(e_name), self.S0, READ),
-             Arg(self.d("pressure"), self.S0, WRITE),
-             Arg(self.d("soundspeed"), self.S0, WRITE)],
+            [self.d(rho_name), self.d(e_name), self.d("pressure"),
+             self.d("soundspeed")],
             k,
         )
 
@@ -151,9 +143,8 @@ class CloverLeaf2D:
 
         rt.par_loop(
             "viscosity", self.block, self._interior(),
-            [Arg(self.d("xvel0"), self.S_xp, READ), Arg(self.d("yvel0"), self.S_yp, READ),
-             Arg(self.d("density0"), self.S0, READ),
-             Arg(self.d("viscosity"), self.S0, WRITE)],
+            [self.d("xvel0"), self.d("yvel0"), self.d("density0"),
+             self.d("viscosity")],
             k,
         )
 
@@ -168,8 +159,7 @@ class CloverLeaf2D:
 
         rt.par_loop(
             "calc_dt", self.block, self._interior(),
-            [Arg(self.d("soundspeed"), self.S0, READ), Arg(self.d("xvel0"), self.S0, READ),
-             Arg(self.d("yvel0"), self.S0, READ)],
+            [self.d("soundspeed"), self.d("xvel0"), self.d("yvel0")],
             k, reductions=[ReductionSpec("dt", "min")],
         )
 
@@ -187,10 +177,9 @@ class CloverLeaf2D:
 
         rt.par_loop(
             f"pdv_{tag}", self.block, self._interior(),
-            [Arg(self.d("xvel0"), self.S_xp, READ), Arg(self.d("yvel0"), self.S_yp, READ),
-             Arg(self.d("density0"), self.S0, READ), Arg(self.d("energy0"), self.S0, READ),
-             Arg(self.d("pressure"), self.S0, READ),
-             Arg(self.d(dst_rho), self.S0, WRITE), Arg(self.d(dst_e), self.S0, WRITE)],
+            [self.d("xvel0"), self.d("yvel0"), self.d("density0"),
+             self.d("energy0"), self.d("pressure"), self.d(dst_rho),
+             self.d(dst_e)],
             k,
         )
 
@@ -200,8 +189,8 @@ class CloverLeaf2D:
 
         rt.par_loop(
             "revert", self.block, self._interior(),
-            [Arg(self.d("density0"), self.S0, READ), Arg(self.d("energy0"), self.S0, READ),
-             Arg(self.d("density1"), self.S0, WRITE), Arg(self.d("energy1"), self.S0, WRITE)],
+            [self.d("density0"), self.d("energy0"), self.d("density1"),
+             self.d("energy1")],
             k,
         )
 
@@ -223,11 +212,9 @@ class CloverLeaf2D:
 
         rt.par_loop(
             "accelerate", self.block, rng,
-            [Arg(self.d("density0"), self.S_node, READ),
-             Arg(self.d("pressure"), self.S_node, READ),
-             Arg(self.d("viscosity"), self.S_node, READ),
-             Arg(self.d("xvel0"), self.S0, READ), Arg(self.d("yvel0"), self.S0, READ),
-             Arg(self.d("xvel1"), self.S0, WRITE), Arg(self.d("yvel1"), self.S0, WRITE)],
+            [self.d("density0"), self.d("pressure"), self.d("viscosity"),
+             self.d("xvel0"), self.d("yvel0"), self.d("xvel1"),
+             self.d("yvel1")],
             k,
         )
 
@@ -241,17 +228,14 @@ class CloverLeaf2D:
 
         rt.par_loop(
             "flux_calc", self.block, self._interior(),
-            [Arg(self.d("xvel1"), self.S_yp, READ), Arg(self.d("yvel1"), self.S_xp, READ),
-             Arg(self.d("xarea"), self.S0, READ), Arg(self.d("yarea"), self.S0, READ),
-             Arg(self.d("vol_flux_x"), self.S0, WRITE),
-             Arg(self.d("vol_flux_y"), self.S0, WRITE)],
+            [self.d("xvel1"), self.d("yvel1"), self.d("xarea"),
+             self.d("yarea"), self.d("vol_flux_x"), self.d("vol_flux_y")],
             k,
         )
 
     def _advec_cell(self, rt, sweep: str):
         """Directionally-split donor-cell advection of density & energy."""
         flux = f"vol_flux_{sweep}"
-        S_flux = self.S_xp if sweep == "x" else self.S_yp
         S_don = self.S_adv_x if sweep == "x" else self.S_adv_y
         off = (1, 0) if sweep == "x" else (0, 1)
         moff = (-1, 0) if sweep == "x" else (0, -1)
@@ -264,8 +248,8 @@ class CloverLeaf2D:
 
         rt.par_loop(
             f"advec_cell_{sweep}_vol", self.block, rng,
-            [Arg(self.d("volume"), self.S0, READ), Arg(self.d(flux), S_flux, READ),
-             Arg(self.d("pre_vol"), self.S0, WRITE), Arg(self.d("post_vol"), self.S0, WRITE)],
+            [self.d("volume"), self.d(flux), self.d("pre_vol"),
+             self.d("post_vol")],
             k_prevol,
         )
 
@@ -276,12 +260,16 @@ class CloverLeaf2D:
             return {"pre_mass": donor_rho * jnp.abs(f),
                     "ener_flux": donor_rho * donor_e * jnp.abs(f) * jnp.sign(f)}
 
+        # explicit_stencil escape hatch: the simplified donor formula only
+        # reads offsets {-1, 0}, but the original CloverLeaf second-order
+        # scheme reads the full 5-point advection stencil — keeping the wider
+        # declared footprint preserves the paper's skew/footprint behaviour.
         rt.par_loop(
             f"advec_cell_{sweep}_flux", self.block, rng,
-            [Arg(self.d(flux), self.S0, READ),
-             Arg(self.d("density1"), S_don, READ), Arg(self.d("energy1"), S_don, READ),
-             Arg(self.d("pre_mass"), self.S0, WRITE), Arg(self.d("ener_flux"), self.S0, WRITE)],
+            [self.d(flux), self.d("density1"), self.d("energy1"),
+             self.d("pre_mass"), self.d("ener_flux")],
             k_flux,
+            explicit_stencil={"density1": S_don, "energy1": S_don},
         )
 
         def k_update(acc):
@@ -299,11 +287,9 @@ class CloverLeaf2D:
 
         rt.par_loop(
             f"advec_cell_{sweep}_update", self.block, rng,
-            [Arg(self.d(flux), S_flux, READ),
-             Arg(self.d("pre_mass"), S_flux, READ), Arg(self.d("ener_flux"), S_flux, READ),
-             Arg(self.d("pre_vol"), self.S0, READ), Arg(self.d("post_vol"), self.S0, READ),
-             Arg(self.d("density1"), self.S0, RW), Arg(self.d("energy1"), self.S0, RW),
-             Arg(self.d("post_mass"), self.S0, WRITE)],
+            [self.d(flux), self.d("pre_mass"), self.d("ener_flux"),
+             self.d("pre_vol"), self.d("post_vol"), self.d("density1"),
+             self.d("energy1"), self.d("post_mass")],
             k_update,
         )
 
@@ -314,8 +300,6 @@ class CloverLeaf2D:
         vflux = f"vol_flux_{sweep}"
         off = (1, 0) if sweep == "x" else (0, 1)
         moff = (-off[0], -off[1])
-        S_off = self.S_xp if sweep == "x" else self.S_yp
-        S_m = self.S_xm if sweep == "x" else self.S_ym
         rng = ((2, self.nx - 2), (2, self.ny - 2))
         v1 = f"{vel}1"
         mom = "advec_vol"  # momentum-flux work array (original: mom_flux)
@@ -325,8 +309,7 @@ class CloverLeaf2D:
 
         rt.par_loop(
             f"advec_mom_{sweep}_{vel}_mf", self.block, rng,
-            [Arg(self.d(vflux), self.S0, READ), Arg(self.d("density1"), S_off, READ),
-             Arg(self.d(flux), self.S0, WRITE)],
+            [self.d(vflux), self.d("density1"), self.d(flux)],
             k_mass_flux,
         )
 
@@ -337,8 +320,7 @@ class CloverLeaf2D:
 
         rt.par_loop(
             f"advec_mom_{sweep}_{vel}_flx", self.block, rng,
-            [Arg(self.d(flux), self.S0, READ), Arg(self.d(v1), S_m, READ),
-             Arg(self.d(mom), self.S0, WRITE)],
+            [self.d(flux), self.d(v1), self.d(mom)],
             k_mom_flux,
         )
 
@@ -348,8 +330,7 @@ class CloverLeaf2D:
 
         rt.par_loop(
             f"advec_mom_{sweep}_{vel}_up", self.block, rng,
-            [Arg(self.d(mom), S_off, READ),
-             Arg(self.d("post_mass"), self.S0, READ), Arg(self.d(v1), self.S0, RW)],
+            [self.d(mom), self.d("post_mass"), self.d(v1)],
             k_update,
         )
 
@@ -373,15 +354,15 @@ class CloverLeaf2D:
             sites.append((((-depth, nx + depth), (ny + k, ny + k + 1)),
                           (0, -2 * k - 1)))
         for i, (rng, off) in enumerate(sites):
-            sten = offset_stencil(off)
 
             def k_halo(acc, fields=fields, off=off):
                 return {f: acc(f, off) for f in fields}
 
+            # Reads mirror cells, writes halo cells: inference splits each
+            # field into READ(offset stencil) + WRITE(zero) args itself.
             rt.par_loop(
                 f"update_halo_{tag}_{i}", self.block, rng,
-                [Arg(self.d(f), sten, READ) for f in fields]
-                + [Arg(self.d(f), self.S0, WRITE) for f in fields],
+                [self.d(f) for f in fields],
                 k_halo,
             )
 
@@ -392,15 +373,14 @@ class CloverLeaf2D:
 
         rt.par_loop(
             "reset_field", self.block, self._interior(),
-            [Arg(self.d("density1"), self.S0, READ), Arg(self.d("energy1"), self.S0, READ),
-             Arg(self.d("xvel1"), self.S0, READ), Arg(self.d("yvel1"), self.S0, READ),
-             Arg(self.d("density0"), self.S0, WRITE), Arg(self.d("energy0"), self.S0, WRITE),
-             Arg(self.d("xvel0"), self.S0, WRITE), Arg(self.d("yvel0"), self.S0, WRITE)],
+            [self.d("density1"), self.d("energy1"), self.d("xvel1"),
+             self.d("yvel1"), self.d("density0"), self.d("energy0"),
+             self.d("xvel0"), self.d("yvel0")],
             k,
         )
 
     # -- drivers ------------------------------------------------------------------
-    def record_timestep(self, rt: Runtime) -> None:
+    def record_timestep(self, rt: Session) -> None:
         """Record one timestep's loop chain (without the dt chain breaker):
         27 physics loops + 3 update_halo phases x 8 = 51 loops."""
         self._ideal_gas(rt, "density0", "energy0", "")
@@ -424,7 +404,7 @@ class CloverLeaf2D:
         self._reset_field(rt)
         self.step_count += 1
 
-    def record_summary(self, rt: Runtime) -> List[str]:
+    def record_summary(self, rt: Session) -> List[str]:
         """Field summary: the paper's every-10-steps long chain of reductions."""
         names = []
         def k(acc):
@@ -447,13 +427,13 @@ class CloverLeaf2D:
                  ReductionSpec("min_rho", "min")]
         rt.par_loop(
             "field_summary", self.block, self._interior(),
-            [Arg(self.d(n), self.S0, READ)
-             for n in ("density0", "energy0", "xvel0", "yvel0", "volume", "pressure")],
+            [self.d(n) for n in ("density0", "energy0", "xvel0", "yvel0",
+                                  "volume", "pressure")],
             k, reductions=specs,
         )
         return [s.name for s in specs]
 
-    def run(self, rt: Runtime, steps: int, dt_every: bool = True) -> Dict[str, float]:
+    def run(self, rt: Session, steps: int, dt_every: bool = True) -> Dict[str, float]:
         """Full driver: init, then per-step chains with the paper's breakers."""
         self.record_init(rt)
         rt.flush()

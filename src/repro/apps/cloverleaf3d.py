@@ -14,13 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
-    READ,
-    RW,
-    WRITE,
-    Arg,
     Block,
     ReductionSpec,
-    Runtime,
+    Session,
     make_dataset,
     offset_stencil,
     point_stencil,
@@ -79,7 +75,7 @@ class CloverLeaf3D:
         return ((2, self.nx - 2), (2, self.ny - 2), (2, self.nz - 2))
 
     # -- init -----------------------------------------------------------------
-    def record_init(self, rt: Runtime) -> None:
+    def record_init(self, rt: Session) -> None:
         nx, ny, nz = self.nx, self.ny, self.nz
         hx, hy, hz = 2 * np.pi / nx, 2 * np.pi / ny, 2 * np.pi / nz
 
@@ -100,9 +96,8 @@ class CloverLeaf3D:
 
         rt.par_loop(
             "initialise3d", self.block, self._interior(),
-            [Arg(self.d(n), self.S0, WRITE)
-             for n in ("density0", "energy0", "volume", "xarea", "yarea", "zarea",
-                        "xvel0", "yvel0", "zvel0")],
+            [self.d(n) for n in ("density0", "energy0", "volume", "xarea",
+                                  "yarea", "zarea", "xvel0", "yvel0", "zvel0")],
             k_init,
         )
 
@@ -113,9 +108,9 @@ class CloverLeaf3D:
 
         rt.par_loop(
             "zero_fields3d", self.block, self._interior(),
-            [Arg(self.d(n), self.S0, WRITE)
-             for n in ("density1", "energy1", "pressure", "viscosity", "soundspeed",
-                        "xvel1", "yvel1", "zvel1")],
+            [self.d(n) for n in ("density1", "energy1", "pressure",
+                                  "viscosity", "soundspeed", "xvel1", "yvel1",
+                                  "zvel1")],
             k_zero,
         )
 
@@ -129,8 +124,8 @@ class CloverLeaf3D:
 
         rt.par_loop(
             f"ideal_gas3d{tag}", self.block, self._interior(),
-            [Arg(self.d(rho_name), self.S0, READ), Arg(self.d(e_name), self.S0, READ),
-             Arg(self.d("pressure"), self.S0, WRITE), Arg(self.d("soundspeed"), self.S0, WRITE)],
+            [self.d(rho_name), self.d(e_name), self.d("pressure"),
+             self.d("soundspeed")],
             k,
         )
 
@@ -143,11 +138,8 @@ class CloverLeaf3D:
 
         rt.par_loop(
             "viscosity3d", self.block, self._interior(),
-            [Arg(self.d("xvel0"), self.S_p["x"], READ),
-             Arg(self.d("yvel0"), self.S_p["y"], READ),
-             Arg(self.d("zvel0"), self.S_p["z"], READ),
-             Arg(self.d("density0"), self.S0, READ),
-             Arg(self.d("viscosity"), self.S0, WRITE)],
+            [self.d("xvel0"), self.d("yvel0"), self.d("zvel0"),
+             self.d("density0"), self.d("viscosity")],
             k,
         )
 
@@ -159,8 +151,7 @@ class CloverLeaf3D:
 
         rt.par_loop(
             "calc_dt3d", self.block, self._interior(),
-            [Arg(self.d(n), self.S0, READ)
-             for n in ("soundspeed", "xvel0", "yvel0", "zvel0")],
+            [self.d(n) for n in ("soundspeed", "xvel0", "yvel0", "zvel0")],
             k, reductions=[ReductionSpec("dt", "min")],
         )
 
@@ -177,12 +168,9 @@ class CloverLeaf3D:
 
         rt.par_loop(
             f"pdv3d_{tag}", self.block, self._interior(),
-            [Arg(self.d("xvel0"), self.S_p["x"], READ),
-             Arg(self.d("yvel0"), self.S_p["y"], READ),
-             Arg(self.d("zvel0"), self.S_p["z"], READ),
-             Arg(self.d("density0"), self.S0, READ), Arg(self.d("energy0"), self.S0, READ),
-             Arg(self.d("pressure"), self.S0, READ),
-             Arg(self.d("density1"), self.S0, WRITE), Arg(self.d("energy1"), self.S0, WRITE)],
+            [self.d("xvel0"), self.d("yvel0"), self.d("zvel0"),
+             self.d("density0"), self.d("energy0"), self.d("pressure"),
+             self.d("density1"), self.d("energy1")],
             k,
         )
 
@@ -192,8 +180,8 @@ class CloverLeaf3D:
 
         rt.par_loop(
             "revert3d", self.block, self._interior(),
-            [Arg(self.d("density0"), self.S0, READ), Arg(self.d("energy0"), self.S0, READ),
-             Arg(self.d("density1"), self.S0, WRITE), Arg(self.d("energy1"), self.S0, WRITE)],
+            [self.d("density0"), self.d("energy0"), self.d("density1"),
+             self.d("energy1")],
             k,
         )
 
@@ -214,11 +202,9 @@ class CloverLeaf3D:
 
         rt.par_loop(
             "accelerate3d", self.block, rng,
-            [Arg(self.d("density0"), self.S_node, READ),
-             Arg(self.d("pressure"), self.S_node, READ),
-             Arg(self.d("viscosity"), self.S_node, READ)]
-            + [Arg(self.d(f"{v}0"), self.S0, READ) for v in ("xvel", "yvel", "zvel")]
-            + [Arg(self.d(f"{v}1"), self.S0, WRITE) for v in ("xvel", "yvel", "zvel")],
+            [self.d("density0"), self.d("pressure"), self.d("viscosity")]
+            + [self.d(f"{v}0") for v in ("xvel", "yvel", "zvel")]
+            + [self.d(f"{v}1") for v in ("xvel", "yvel", "zvel")],
             k,
         )
 
@@ -234,12 +220,9 @@ class CloverLeaf3D:
 
         rt.par_loop(
             "flux_calc3d", self.block, self._interior(),
-            [Arg(self.d("xvel1"), self.S_p["y"], READ),
-             Arg(self.d("yvel1"), self.S_p["z"], READ),
-             Arg(self.d("zvel1"), self.S_p["x"], READ)]
-            + [Arg(self.d(a), self.S0, READ) for a in ("xarea", "yarea", "zarea")]
-            + [Arg(self.d(f), self.S0, WRITE)
-               for f in ("vol_flux_x", "vol_flux_y", "vol_flux_z")],
+            [self.d("xvel1"), self.d("yvel1"), self.d("zvel1")]
+            + [self.d(a) for a in ("xarea", "yarea", "zarea")]
+            + [self.d(f) for f in ("vol_flux_x", "vol_flux_y", "vol_flux_z")],
             k,
         )
 
@@ -247,7 +230,6 @@ class CloverLeaf3D:
         flux = f"vol_flux_{sweep}"
         off = _AXES[sweep]
         moff = tuple(-o for o in off)
-        S_off = self.S_p[sweep]
         S_don = self.S_adv[sweep]
         rng = self._adv_range()
 
@@ -257,8 +239,8 @@ class CloverLeaf3D:
 
         rt.par_loop(
             f"advec_cell3d_{sweep}_vol", self.block, rng,
-            [Arg(self.d("volume"), self.S0, READ), Arg(self.d(flux), S_off, READ),
-             Arg(self.d("pre_vol"), self.S0, WRITE), Arg(self.d("post_vol"), self.S0, WRITE)],
+            [self.d("volume"), self.d(flux), self.d("pre_vol"),
+             self.d("post_vol")],
             k_prevol,
         )
 
@@ -271,10 +253,11 @@ class CloverLeaf3D:
 
         rt.par_loop(
             f"advec_cell3d_{sweep}_flux", self.block, rng,
-            [Arg(self.d(flux), self.S0, READ),
-             Arg(self.d("density1"), S_don, READ), Arg(self.d("energy1"), S_don, READ),
-             Arg(self.d("pre_mass"), self.S0, WRITE), Arg(self.d("ener_flux"), self.S0, WRITE)],
+            [self.d(flux), self.d("density1"), self.d("energy1"),
+             self.d("pre_mass"), self.d("ener_flux")],
             k_flux,
+            # keep the original second-order advection footprint (see 2-D app)
+            explicit_stencil={"density1": S_don, "energy1": S_don},
         )
 
         def k_update(acc):
@@ -291,11 +274,9 @@ class CloverLeaf3D:
 
         rt.par_loop(
             f"advec_cell3d_{sweep}_update", self.block, rng,
-            [Arg(self.d(flux), S_off, READ),
-             Arg(self.d("pre_mass"), S_off, READ), Arg(self.d("ener_flux"), S_off, READ),
-             Arg(self.d("pre_vol"), self.S0, READ), Arg(self.d("post_vol"), self.S0, READ),
-             Arg(self.d("density1"), self.S0, RW), Arg(self.d("energy1"), self.S0, RW),
-             Arg(self.d("post_mass"), self.S0, WRITE)],
+            [self.d(flux), self.d("pre_mass"), self.d("ener_flux"),
+             self.d("pre_vol"), self.d("post_vol"), self.d("density1"),
+             self.d("energy1"), self.d("post_mass")],
             k_update,
         )
 
@@ -306,8 +287,6 @@ class CloverLeaf3D:
         vflux = f"vol_flux_{sweep}"
         off = _AXES[sweep]
         moff = tuple(-o for o in off)
-        S_off = self.S_p[sweep]
-        S_m = offset_stencil((0, 0, 0), moff)
         rng = self._adv_range()
         v1 = f"{vel}1"
         mom = "advec_vol"
@@ -317,8 +296,7 @@ class CloverLeaf3D:
 
         rt.par_loop(
             f"advec_mom3d_{sweep}_{vel}_mf", self.block, rng,
-            [Arg(self.d(vflux), self.S0, READ), Arg(self.d("density1"), S_off, READ),
-             Arg(self.d(flux), self.S0, WRITE)],
+            [self.d(vflux), self.d("density1"), self.d(flux)],
             k_mf,
         )
 
@@ -329,8 +307,7 @@ class CloverLeaf3D:
 
         rt.par_loop(
             f"advec_mom3d_{sweep}_{vel}_flx", self.block, rng,
-            [Arg(self.d(flux), self.S0, READ), Arg(self.d(v1), S_m, READ),
-             Arg(self.d(mom), self.S0, WRITE)],
+            [self.d(flux), self.d(v1), self.d(mom)],
             k_mom,
         )
 
@@ -340,8 +317,7 @@ class CloverLeaf3D:
 
         rt.par_loop(
             f"advec_mom3d_{sweep}_{vel}_up", self.block, rng,
-            [Arg(self.d(mom), S_off, READ),
-             Arg(self.d("post_mass"), self.S0, READ), Arg(self.d(v1), self.S0, RW)],
+            [self.d(mom), self.d("post_mass"), self.d(v1)],
             k_up,
         )
 
@@ -354,13 +330,13 @@ class CloverLeaf3D:
 
         rt.par_loop(
             "reset_field3d", self.block, self._interior(),
-            [Arg(self.d(src), self.S0, READ) for _, src in pairs]
-            + [Arg(self.d(dst), self.S0, WRITE) for dst, _ in pairs],
+            [self.d(src) for _, src in pairs]
+            + [self.d(dst) for dst, _ in pairs],
             k,
         )
 
     # -- drivers --------------------------------------------------------------
-    def record_timestep(self, rt: Runtime) -> None:
+    def record_timestep(self, rt: Session) -> None:
         self._ideal_gas(rt, "density0", "energy0", "")
         self._viscosity(rt)
         self._pdv(rt, True, "predict")
@@ -377,7 +353,7 @@ class CloverLeaf3D:
         self._reset_field(rt)
         self.step_count += 1
 
-    def record_summary(self, rt: Runtime) -> List[str]:
+    def record_summary(self, rt: Session) -> List[str]:
         def k(acc):
             rho = acc("density0")
             ke = 0.5 * rho * (acc("xvel0") ** 2 + acc("yvel0") ** 2 + acc("zvel0") ** 2)
@@ -394,14 +370,13 @@ class CloverLeaf3D:
                  ReductionSpec("min_rho", "min")]
         rt.par_loop(
             "field_summary3d", self.block, self._interior(),
-            [Arg(self.d(n), self.S0, READ)
-             for n in ("density0", "energy0", "xvel0", "yvel0", "zvel0",
-                        "volume", "pressure")],
+            [self.d(n) for n in ("density0", "energy0", "xvel0", "yvel0",
+                                  "zvel0", "volume", "pressure")],
             k, reductions=specs,
         )
         return [s.name for s in specs]
 
-    def run(self, rt: Runtime, steps: int, dt_every: bool = True) -> Dict[str, float]:
+    def run(self, rt: Session, steps: int, dt_every: bool = True) -> Dict[str, float]:
         self.record_init(rt)
         rt.flush()
         rt.cyclic = True

@@ -15,13 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
-    READ,
-    RW,
-    WRITE,
-    Arg,
     Block,
     ReductionSpec,
-    Runtime,
+    Session,
     make_dataset,
     offset_stencil,
     point_stencil,
@@ -80,7 +76,7 @@ class OpenSBLI:
         return ((2, n - 2), (2, n - 2), (2, n - 2))
 
     # -- init: Taylor-Green vortex -----------------------------------------------
-    def record_init(self, rt: Runtime) -> None:
+    def record_init(self, rt: Session) -> None:
         n = self.n
         h = 2 * np.pi / n
 
@@ -103,8 +99,8 @@ class OpenSBLI:
 
         rt.par_loop(
             "tgv_init", self.block, ((0, n), (0, n), (0, n)),
-            [Arg(self.d(nm), self.S0, WRITE)
-             for nm in ("rho", "rhou", "rhov", "rhow", "rhoE", "detJ", "mu", "kappa")],
+            [self.d(nm) for nm in ("rho", "rhou", "rhov", "rhow", "rhoE",
+                                    "detJ", "mu", "kappa")],
             k_init,
         )
 
@@ -117,8 +113,9 @@ class OpenSBLI:
 
         rt.par_loop(
             "zero_work", self.block, ((0, n), (0, n), (0, n)),
-            [Arg(self.d(nm), self.S0, WRITE) for nm in self.names
-             if nm not in ("rho", "rhou", "rhov", "rhow", "rhoE", "detJ", "mu", "kappa")],
+            [self.d(nm) for nm in self.names
+             if nm not in ("rho", "rhou", "rhov", "rhow", "rhoE", "detJ",
+                           "mu", "kappa")],
             k_zero,
         )
 
@@ -135,9 +132,8 @@ class OpenSBLI:
 
         rt.par_loop(
             f"primitives_s{stage}", self.block, ((0, self.n), (0, self.n), (0, self.n)),
-            [Arg(self.d(nm), self.S0, READ)
-             for nm in ("rho", "rhou", "rhov", "rhow", "rhoE")]
-            + [Arg(self.d(nm), self.S0, WRITE) for nm in ("u", "v", "w", "p", "T")],
+            [self.d(nm) for nm in ("rho", "rhou", "rhov", "rhow", "rhoE")]
+            + [self.d(nm) for nm in ("u", "v", "w", "p", "T")],
             k,
         )
 
@@ -158,13 +154,8 @@ class OpenSBLI:
 
         rt.par_loop(
             f"shear_s{stage}", self.block, self._interior(),
-            [Arg(self.d("u"), self.S_c1["x"], READ), Arg(self.d("u"), self.S_c1["y"], READ),
-             Arg(self.d("u"), self.S_c1["z"], READ), Arg(self.d("v"), self.S_c1["x"], READ),
-             Arg(self.d("v"), self.S_c1["y"], READ), Arg(self.d("v"), self.S_c1["z"], READ),
-             Arg(self.d("w"), self.S_c1["x"], READ), Arg(self.d("w"), self.S_c1["y"], READ),
-             Arg(self.d("w"), self.S_c1["z"], READ)]
-            + [Arg(self.d(nm), self.S0, WRITE)
-               for nm in ("sxx", "syy", "szz", "sxy", "sxz", "syz")],
+            [self.d("u"), self.d("v"), self.d("w")]
+            + [self.d(nm) for nm in ("sxx", "syy", "szz", "sxy", "sxz", "syz")],
             k,
         )
 
@@ -201,17 +192,20 @@ class OpenSBLI:
                 r = -(conv + work) + acc("kappa") * lap("T") + visc
             return {f"{eq}_r": r}
 
-        args = [Arg(self.d(eq), self.S_c2[a], READ) for a in "xyz"]
-        args += [Arg(self.d(nm), self.S0, READ) for nm in ("u", "v", "w")]
-        args += [Arg(self.d("p"), self.S_c1[a], READ) for a in "xyz"]
-        args += [Arg(self.d(nm), self.S0, READ)
-                 for nm in ("sxx", "syy", "szz", "sxy", "sxz", "syz", "mu", "kappa", "rho")]
-        if eq in vel_of:
-            args += [Arg(self.d(vel_of[eq]), self.S_c1[a], READ) for a in "xyz"]
-        if eq == "rhoE":
-            args += [Arg(self.d("T"), self.S_c1[a], READ) for a in "xyz"]
-        args += [Arg(self.d(f"{eq}_r"), self.S0, WRITE)]
-        rt.par_loop(f"residual_{eq}_s{stage}", self.block, self._interior(), args, k)
+        # Exact per-equation dataset sets (inference rejects unused dats, so
+        # the old always-pass-everything declaration style doesn't survive).
+        dats = [self.d(eq), self.d("u"), self.d("v"), self.d("w")]
+        if eq == "rho":
+            dats += [self.d(nm) for nm in ("sxx", "syy", "szz")]
+        elif eq in vel_of:
+            dats += [self.d("p"), self.d("mu")]
+        else:  # rhoE
+            dats += [self.d("p")]
+            dats += [self.d(nm)
+                     for nm in ("sxx", "syy", "szz", "sxy", "sxz", "syz")]
+            dats += [self.d("mu"), self.d("kappa"), self.d("T")]
+        dats.append(self.d(f"{eq}_r"))
+        rt.par_loop(f"residual_{eq}_s{stage}", self.block, self._interior(), dats, k)
 
     def _rk_update(self, rt, stage: int):
         a_c, b_c = _RK_A[stage], _RK_B[stage]
@@ -228,14 +222,14 @@ class OpenSBLI:
 
         rt.par_loop(
             f"rk_update_s{stage}", self.block, self._interior(),
-            [Arg(self.d(c), self.S0, RW) for c in cons]
-            + [Arg(self.d(f"{c}_w"), self.S0, RW) for c in cons]
-            + [Arg(self.d(f"{c}_r"), self.S0, READ) for c in cons],
+            [self.d(c) for c in cons]
+            + [self.d(f"{c}_w") for c in cons]
+            + [self.d(f"{c}_r") for c in cons],
             k,
         )
 
     # -- drivers --------------------------------------------------------------------
-    def record_timestep(self, rt: Runtime) -> None:
+    def record_timestep(self, rt: Session) -> None:
         """27 loops: 3 stages x (primitives + shear + 5 residuals + rk_update) = 24,
         plus 3 halo-refresh copies folded into the update (counted once)."""
         for stage in range(3):
@@ -245,7 +239,7 @@ class OpenSBLI:
                 self._residual(rt, eq, stage)
             self._rk_update(rt, stage)
 
-    def record_summary(self, rt: Runtime) -> List[str]:
+    def record_summary(self, rt: Session) -> List[str]:
         def k(acc):
             rho = acc("rho")
             ke = 0.5 * (acc("rhou") ** 2 + acc("rhov") ** 2 + acc("rhow") ** 2) / jnp.maximum(rho, 1e-3)
@@ -256,12 +250,12 @@ class OpenSBLI:
                  ReductionSpec("max_rho", "max")]
         rt.par_loop(
             "tgv_summary", self.block, self._interior(),
-            [Arg(self.d(nm), self.S0, READ) for nm in ("rho", "rhou", "rhov", "rhow")],
+            [self.d(nm) for nm in ("rho", "rhou", "rhov", "rhow")],
             k, reductions=specs,
         )
         return [s.name for s in specs]
 
-    def run(self, rt: Runtime, steps: int) -> Dict[str, float]:
+    def run(self, rt: Session, steps: int) -> Dict[str, float]:
         self.record_init(rt)
         rt.flush()
         rt.cyclic = True

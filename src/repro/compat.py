@@ -1,0 +1,67 @@
+"""Compatibility helpers across JAX versions.
+
+The repo targets current JAX but must run on older installs (e.g. 0.4.x)
+where two APIs differ:
+
+* ``jax.make_mesh`` grew an ``axis_types=`` parameter (and
+  ``jax.sharding.AxisType``) only in newer releases;
+* ``jax.shard_map`` (with ``check_vma=``) replaced
+  ``jax.experimental.shard_map.shard_map`` (with ``check_rep=``).
+
+Everything in the repo goes through these two wrappers instead of touching
+the version-specific spellings directly.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where supported.
+
+    On JAX versions exposing ``jax.sharding.AxisType`` the mesh is built with
+    every axis in Auto mode (the repo's convention); older versions have no
+    axis-type concept and get the plain mesh, which behaves identically.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(axis_type.Auto,) * len(tuple(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis, inside shard_map/pmap bodies.
+
+    ``jax.lax.axis_size`` on new JAX; on old releases ``jax.core.axis_frame``
+    already resolves to the bound axis size.
+    """
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    import jax.core as core
+
+    frame = core.axis_frame(axis_name)
+    return getattr(frame, "size", frame)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on new JAX, experimental shard_map on old.
+
+    ``check_vma`` maps onto the old API's ``check_rep`` (same meaning:
+    verify per-shard replication invariants; both default off here because
+    the repo's collectives handle replication explicitly).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma)

@@ -1,10 +1,31 @@
 """repro.core — the paper's contribution: runtime skewed tiling + out-of-core
 streaming execution of stencil loop chains (OPS-style DSL in JAX)."""
+from .backends import (
+    PallasBackend,
+    ReferenceBackend,
+    available_backends,
+    make_backend,
+    register_backend,
+)
 from .block import Block
 from .dataset import Dataset, make_dataset
-from .dependency import ChainInfo, analyze_chain
-from .executor import ChainStats, OOCConfig, OutOfCoreExecutor, ResidentExecutor
+from .dependency import ChainInfo, analyze_chain, chain_signature, plan_signature
+from .executor import (
+    ChainPlan,
+    ChainStats,
+    OOCConfig,
+    OutOfCoreExecutor,
+    ResidentExecutor,
+)
 from .lazy import ReferenceRuntime, Runtime
+from .program import (
+    ExecutionConfig,
+    Session,
+    StencilProgram,
+    StencilValidationError,
+    infer_args,
+    trace_kernel,
+)
 from .loop import (
     INC,
     READ,
@@ -31,8 +52,14 @@ from .tiling import TileSchedule, choose_num_tiles, make_tile_schedule
 
 __all__ = [
     "Block", "Dataset", "make_dataset", "ChainInfo", "analyze_chain",
-    "ChainStats", "OOCConfig", "OutOfCoreExecutor", "ResidentExecutor",
-    "ReferenceRuntime", "Runtime", "AccessMode", "Accessor", "Arg",
+    "chain_signature", "plan_signature",
+    "ChainPlan", "ChainStats", "OOCConfig", "OutOfCoreExecutor",
+    "ResidentExecutor", "ReferenceRuntime", "Runtime",
+    "Session", "StencilProgram", "ExecutionConfig", "StencilValidationError",
+    "infer_args", "trace_kernel",
+    "available_backends", "make_backend", "register_backend",
+    "ReferenceBackend", "PallasBackend",
+    "AccessMode", "Accessor", "Arg",
     "ParallelLoop", "ReductionSpec", "READ", "WRITE", "RW", "INC",
     "GB", "KNL_7210", "P100_NVLINK", "P100_PCIE", "PRESETS", "TPU_V5E",
     "HardwareModel", "TransferLedger", "Stencil", "box_stencil",

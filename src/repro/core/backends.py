@@ -1,0 +1,170 @@
+"""String-keyed backend registry: how a :class:`~repro.core.program.Session`
+turns an :class:`~repro.core.program.ExecutionConfig` into something that can
+run loop chains.
+
+A backend is any object with ``run_chain(loops) -> {reduction: value}``;
+optional attributes the session surfaces when present: ``history`` (per-chain
+:class:`~repro.core.executor.ChainStats`), ``cfg`` (for the cyclic flag), and
+``plan_hits``/``plan_misses``/``plan_time_s`` (chain-plan cache counters).
+
+Built-ins:
+
+==============  ===============================================================
+``reference``   eager NumPy oracle, program order, no tiling (tests)
+``resident``    paper baseline: everything in fast memory, raises beyond it
+``ooc``         3-slot out-of-core streaming executor (Algorithm 1)
+``ooc-cyclic``  ``ooc`` with the §4.1 unsafe-temporaries elision pre-enabled
+``sim``         ``ooc`` schedule/ledger only — no data plane (modelled runs)
+``pallas``      eager backend routing tagged star-sweep loops through the
+                Pallas TPU kernels in :mod:`repro.kernels` (fast path), with
+                the reference path for everything else
+==============  ===============================================================
+
+Register your own with::
+
+    @register_backend("my-backend")
+    def _build(config: ExecutionConfig):
+        return MyExecutor(...)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .loop import AccessMode, ParallelLoop
+from .reference import (
+    merge_loop_reductions,
+    run_chain_reference,
+    run_loop_reference,
+)
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_backend(name: str):
+    """Decorator registering ``factory(config) -> backend`` under ``name``."""
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_backend(config):
+    """Instantiate the backend ``config.backend`` names."""
+    factory = _REGISTRY.get(config.backend)
+    if factory is None:
+        raise ValueError(
+            f"unknown backend {config.backend!r}; "
+            f"available: {', '.join(available_backends())}")
+    return factory(config)
+
+
+# -- built-in backends ------------------------------------------------------------
+
+
+class ReferenceBackend:
+    """Eager NumPy oracle (what :class:`ReferenceRuntime` used to be)."""
+
+    def __init__(self):
+        self.history: List = []
+
+    def run_chain(self, loops: Sequence[ParallelLoop]):
+        return run_chain_reference(loops)
+
+
+class PallasBackend:
+    """Eager backend with a Pallas fast path for tagged star-sweep loops.
+
+    Loops whose kernel carries a ``pallas_op`` tag (built by
+    :func:`repro.kernels.star2d_kernel` / ``star3d_kernel``) execute through
+    the Pallas TPU kernels (``stencil2d``/``stencil3d``); untagged loops fall
+    back to the reference path, so arbitrary chains still run correctly.
+    """
+
+    def __init__(self):
+        self.history: List = []
+        self.pallas_loops = 0
+        self.fallback_loops = 0
+
+    def run_chain(self, loops: Sequence[ParallelLoop]):
+        merged: Dict[str, np.ndarray] = {}
+        for lp in loops:
+            op = getattr(lp.kernel, "pallas_op", None)
+            if op is not None and self._try_pallas(lp, op):
+                self.pallas_loops += 1
+                continue
+            self.fallback_loops += 1
+            merge_loop_reductions(merged, lp, run_loop_reference(lp))
+        return merged
+
+    def _try_pallas(self, lp: ParallelLoop, op) -> bool:
+        kind, src, dst, coeffs = op
+        if lp.reductions or kind not in ("stencil2d", "stencil3d"):
+            return False
+        dats = {a.dat.name: a.dat for a in lp.args}
+        if src not in dats or dst not in dats:
+            return False
+        src_dat, dst_dat = dats[src], dats[dst]
+        # The fast path overwrites exactly dst from src: any other write arg,
+        # an INC dst, or src==dst must take the general path.
+        write_args = [a for a in lp.args if a.mode.writes]
+        if (src == dst or len(write_args) != 1
+                or write_args[0].dat.name != dst
+                or write_args[0].mode is AccessMode.INC):
+            return False
+        box = lp.range_
+        halo_box = tuple((a - 1, b + 1) for a, b in box)
+        for d, (lo, hi) in enumerate(halo_box):
+            blo, bhi = src_dat.bounds(d)
+            if lo < blo or hi > bhi:
+                return False
+        from .. import kernels  # lazy: pulls in jax.experimental.pallas
+
+        fn = kernels.stencil2d if kind == "stencil2d" else kernels.stencil3d
+        padded = np.ascontiguousarray(src_dat.read(halo_box))
+        out = fn(padded, np.asarray(coeffs, np.float32))
+        dst_dat.write(box, np.asarray(out, dtype=dst_dat.dtype))
+        return True
+
+
+@register_backend("reference")
+def _reference(config):
+    return ReferenceBackend()
+
+
+@register_backend("pallas")
+def _pallas(config):
+    return PallasBackend()
+
+
+@register_backend("resident")
+def _resident(config):
+    from .executor import ResidentExecutor
+
+    return ResidentExecutor(hw=config.hw, capacity_bytes=config.capacity_bytes)
+
+
+@register_backend("ooc")
+def _ooc(config):
+    from .executor import OutOfCoreExecutor
+
+    return OutOfCoreExecutor(config.ooc_config())
+
+
+@register_backend("ooc-cyclic")
+def _ooc_cyclic(config):
+    from .executor import OutOfCoreExecutor
+
+    return OutOfCoreExecutor(config.ooc_config(cyclic=True))
+
+
+@register_backend("sim")
+def _sim(config):
+    from .executor import OutOfCoreExecutor
+
+    return OutOfCoreExecutor(config.ooc_config(simulate_only=True))

@@ -178,3 +178,123 @@ def chain_signature(info: ChainInfo) -> Tuple:
         )
         for lp in info.loops
     )
+
+
+# -- plan-cache keys -------------------------------------------------------------
+#
+# ``chain_signature`` is structural only — good enough for the prefetch guess,
+# but NOT for replaying a cached plan: the engine's jit'd tile functions close
+# over the chain's kernel callables, and applications re-record kernels every
+# timestep as fresh closures whose captured constants (dt, RK coefficients,
+# sweep direction strings) may change.  ``kernel_fingerprint`` hashes the code
+# object plus captured/default values so a changed constant forces a re-plan;
+# captured values that aren't plain data (datasets, app objects) hash by type —
+# the documented kernel contract is that such captures are static config.
+
+_PRIMITIVES = (bool, int, float, str, bytes, type(None))
+
+
+def _fp_value(v, depth: int = 0) -> Tuple:
+    if depth > 6:
+        # Past the recursion cap, fail toward *identity*: equality here would
+        # let two distinct deep values share a cached plan (stale replay).
+        return ("deep", id(v))
+    if isinstance(v, _PRIMITIVES):
+        return ("v", v)
+    if isinstance(v, (tuple, list)):
+        return ("t", tuple(_fp_value(x, depth + 1) for x in v))
+    if isinstance(v, dict):
+        return ("d", tuple(sorted(
+            (repr(k), _fp_value(x, depth + 1)) for k, x in v.items())))
+    try:
+        import numpy as _np
+        if isinstance(v, _np.generic):
+            return ("v", v.item())
+        arr = None
+        if isinstance(v, _np.ndarray):
+            arr = v
+        elif (type(v).__module__.partition(".")[0] in ("jax", "jaxlib")
+              and hasattr(v, "shape") and hasattr(v, "dtype")):
+            arr = _np.asarray(v)
+        if arr is not None:
+            # Content-hash captured arrays: hashing by type alone would let
+            # the plan cache replay a kernel whose coefficients changed.
+            raw = _np.ascontiguousarray(arr).tobytes()
+            if len(raw) <= 4096:
+                return ("a", arr.dtype.str, arr.shape, raw)
+            import hashlib
+            return ("a", arr.dtype.str, arr.shape,
+                    hashlib.sha1(raw).hexdigest())
+    except Exception:  # pragma: no cover
+        pass
+    if callable(v) and hasattr(v, "__code__"):
+        return ("f", kernel_fingerprint(v, depth + 1))
+    try:  # frozen dataclasses (Stencil, HardwareModel), enums, etc.
+        return ("h", hash(v), type(v).__qualname__)
+    except TypeError:
+        # Unhashable object: identity-fingerprint.  id() is stable while the
+        # object lives (apps capture `self` once, so steps still cache-hit);
+        # a *different* instance forces a re-plan — the safe direction.
+        return ("o", f"{type(v).__module__}.{type(v).__qualname__}", id(v))
+
+
+def _code_fp(code, depth: int = 0) -> Tuple:
+    """Fingerprint a code object by value.  ``co_code`` references constants
+    and globals by *index*, so co_consts/co_names must be hashed too — two
+    lambdas on one source line differing only in a literal would otherwise
+    collide.  Nested code objects (inner functions) recurse."""
+    consts = tuple(
+        _code_fp(c, depth + 1) if hasattr(c, "co_code") else _fp_value(c, depth + 1)
+        for c in code.co_consts)
+    return (code.co_filename, code.co_firstlineno, code.co_code,
+            code.co_names, consts)
+
+
+def kernel_fingerprint(fn, depth: int = 0) -> Tuple:
+    """Value-level identity of a kernel callable (code + captured constants)."""
+    import functools as _functools
+
+    if isinstance(fn, _functools.partial):
+        return ("p", kernel_fingerprint(fn.func, depth + 1),
+                _fp_value(tuple(fn.args), depth), _fp_value(fn.keywords or {}, depth))
+    code = getattr(fn, "__code__", None)
+    if code is None:  # callable object: type + instance identity (stateful
+        # callables with different state must not share a cached plan)
+        return ("o", f"{type(fn).__module__}.{type(fn).__qualname__}", id(fn))
+    cells = []
+    for cell in getattr(fn, "__closure__", None) or ():
+        try:
+            cells.append(_fp_value(cell.cell_contents, depth))
+        except ValueError:  # unassigned cell
+            cells.append(("unset",))
+    defaults = tuple(_fp_value(v, depth)
+                     for v in (getattr(fn, "__defaults__", None) or ()))
+    kwdefaults = _fp_value(getattr(fn, "__kwdefaults__", None) or {}, depth)
+    return ("k", _code_fp(code, depth), tuple(cells), defaults, kwdefaults)
+
+
+def loop_kernel_fingerprint(lp: ParallelLoop) -> Tuple:
+    """Kernel fingerprint memoised on the loop object — each recorded loop's
+    kernel is walked once, not once per flush plus once per inference."""
+    fp = lp.__dict__.get("_kernel_fp")
+    if fp is None:
+        fp = kernel_fingerprint(lp.kernel)
+        lp.__dict__["_kernel_fp"] = fp
+    return fp
+
+
+def plan_signature(loops: Sequence[ParallelLoop], tiled_dim: int = 0) -> Tuple:
+    """Replay-safe fingerprint of a chain: structure + dataset identity +
+    kernel fingerprints.  Two chains with equal plan signatures execute
+    identically through a cached plan (analysis, schedule, compiled tiles)."""
+    return (tiled_dim,) + tuple(
+        (
+            lp.name,
+            lp.range_,
+            tuple((a.dat.name, id(a.dat), a.stencil.points, a.mode.value)
+                  for a in lp.args),
+            tuple((r.name, r.op) for r in lp.reductions),
+            loop_kernel_fingerprint(lp),
+        )
+        for lp in loops
+    )

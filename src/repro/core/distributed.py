@@ -30,6 +30,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import axis_size, shard_map
 from .dependency import analyze_chain
 from .loop import ParallelLoop
 
@@ -49,7 +50,7 @@ def exchange_halos(arrays: Dict[str, jax.Array], depth: int, axis_name: str,
     into our halo slots with two ``ppermute`` rings (up and down).
     """
     idx = lax.axis_index(axis_name)
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]
     out = {}
@@ -114,7 +115,7 @@ def make_sharded_chain_step(
 
     spec = P(*[None if d != dim else axis_name for d in range(2)])
     # A single PartitionSpec broadcasts over the dict-of-arrays pytree.
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         local, mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False
     )
     return jax.jit(shard_fn)

@@ -20,6 +20,7 @@ the calibrated :class:`~repro.core.memory.HardwareModel` ledger.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -28,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .dependency import ChainInfo, analyze_chain, chain_signature
+from .dependency import ChainInfo, analyze_chain, chain_signature, plan_signature
 from .engine import TileEngine
 from .loop import ParallelLoop
 from .memory import HardwareModel, TPU_V5E, TransferLedger
@@ -71,6 +72,25 @@ class ChainStats:
     modelled_s: float
     achieved_bw_model: float   # loop_bytes / modelled makespan
     slot_bytes: int
+    plan_cache_hit: bool = False   # chain plan replayed from cache
+    plan_s: float = 0.0            # analysis + scheduling time (0 on hits)
+
+
+@dataclass
+class ChainPlan:
+    """The memoised product of dependency analysis + tile scheduling + the
+    compiled tile engine for one chain signature.  Cyclic loop chains
+    (CloverLeaf/OpenSBLI timesteps) are structurally identical across steps,
+    so every flush after the first replays one of these instead of paying
+    ``analyze_chain`` + ``make_tile_schedule`` + jit-cache lookup again."""
+
+    key: Tuple
+    info: ChainInfo
+    sched: TileSchedule
+    engine: TileEngine
+    slot_bytes: int
+    sig: Tuple          # structural chain_signature (prefetch guessing)
+    plan_s: float       # construction cost (what cache hits save)
 
 
 def _region_to_slot(iv: Interval, origin: int) -> Tuple[int, int]:
@@ -82,7 +102,16 @@ class OutOfCoreExecutor:
 
     def __init__(self, config: OOCConfig = None):
         self.cfg = config or OOCConfig()
-        self._engines: Dict[Tuple, TileEngine] = {}
+        # LRU-bounded: kernels capturing a per-step constant (a real dt
+        # changing every step) legitimately produce a new plan per flush —
+        # without a bound a long run would accumulate engines/ChainInfos
+        # (and their jit caches) without limit.
+        self._plans: "OrderedDict[Tuple, ChainPlan]" = OrderedDict()
+        self._max_plans = 32
+        self._no_fit: set = set()   # keys known to raise MemoryError
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.plan_time_s = 0.0
         # Speculative prefetch state: what we uploaded ahead for the next
         # chain: {dat_name: Interval} plus the signature we guessed from.
         self._spec_uploaded: Dict[str, Interval] = {}
@@ -117,43 +146,105 @@ class OutOfCoreExecutor:
                 other *= s
         return iv.length * other * dat.dtype.itemsize
 
+    # -- planning ---------------------------------------------------------------
+    def plan_chain(self, loops: Sequence[ParallelLoop]) -> ChainPlan:
+        """Analysis + tile scheduling + engine, memoised on the replay-safe
+        ``plan_signature`` (structure, dataset identity, kernel fingerprints)
+        plus the planning-relevant config knobs.  Raises ``MemoryError``
+        (uncached) when no tile count fits, so ``run_chain`` can split."""
+        cfg = self.cfg
+        key = (plan_signature(loops, cfg.tiled_dim), cfg.num_tiles,
+               cfg.num_slots, float(cfg.capacity))
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._plans.move_to_end(key)
+            self.plan_hits += 1
+            return plan
+        if key in self._no_fit:   # negative cache: skip the doomed analysis
+            raise MemoryError("chain cannot fit (cached verdict); splitting")
+        t0 = time.perf_counter()
+        try:
+            info = analyze_chain(loops, tiled_dim=cfg.tiled_dim)
+            n_tiles = cfg.num_tiles or choose_num_tiles(
+                info, int(cfg.capacity), num_slots=cfg.num_slots
+            )
+            sched = make_tile_schedule(info, n_tiles)
+            slot_bytes = sched.slot_bytes()
+            if cfg.num_slots * slot_bytes > cfg.capacity:
+                raise MemoryError(
+                    f"{cfg.num_slots} slots x {slot_bytes}B exceed fast "
+                    f"capacity {cfg.capacity}B; increase num_tiles"
+                )
+        except MemoryError:
+            if len(self._no_fit) >= 8 * self._max_plans:
+                self._no_fit.clear()
+            self._no_fit.add(key)
+            raise
+        # The engine (and its jit cache) is owned by the plan: sharing engines
+        # across chains whose kernels differ only in captured constants would
+        # replay stale closures — the fingerprint in ``key`` prevents exactly
+        # that, so the plan's engine is always consistent with its kernels.
+        plan = ChainPlan(
+            key=key, info=info, sched=sched, engine=TileEngine(info),
+            slot_bytes=slot_bytes, sig=chain_signature(info),
+            plan_s=time.perf_counter() - t0,
+        )
+        self._plans[key] = plan
+        if len(self._plans) > self._max_plans:
+            self._plans.popitem(last=False)
+        self.plan_misses += 1
+        self.plan_time_s += plan.plan_s
+        return plan
+
+    @property
+    def plan_hit_rate(self) -> float:
+        tot = self.plan_hits + self.plan_misses
+        return self.plan_hits / tot if tot else 0.0
+
     # -- main entry ------------------------------------------------------------
-    def run_chain(self, loops: Sequence[ParallelLoop]) -> Dict[str, np.ndarray]:
+    def run_chain(self, loops: Sequence[ParallelLoop],
+                  keep_live: frozenset = frozenset()) -> Dict[str, np.ndarray]:
         """Run one chain; if no tile count makes its slots fit fast memory
         (skew span exceeding the grid — long chains on small problems), split
         the chain and run the halves sequentially.  This is the runtime
-        equivalent of OPS bounding the number of loops tiled across."""
+        equivalent of OPS bounding the number of loops tiled across.
+
+        Splitting breaks the §4.1 Cyclic contract: a write-first dat of the
+        first half is no longer a dead temporary if the second half reads it,
+        so its download cannot be elided — ``keep_live`` carries the dats the
+        remainder of the original chain still consumes."""
         try:
-            return self._run_chain_tiled(loops)
+            return self._run_chain_tiled(loops, keep_live)
         except MemoryError:
             if len(loops) <= 1:
                 raise
             mid = len(loops) // 2
-            out = self.run_chain(loops[:mid])
-            out.update(self.run_chain(loops[mid:]))
+            head, tail = loops[:mid], loops[mid:]
+            tail_reads = frozenset(
+                a.dat.name for lp in tail for a in lp.args if a.mode.reads)
+            out = self.run_chain(head, keep_live | tail_reads)
+            # Both halves may contribute to the same reduction: combine, not
+            # overwrite.
+            specs = {r.name: r for lp in loops for r in lp.reductions}
+            for name, val in self.run_chain(tail, keep_live).items():
+                out[name] = (np.asarray(specs[name].combine(out[name], val))
+                             if name in out else val)
             return out
 
-    def _run_chain_tiled(self, loops: Sequence[ParallelLoop]) -> Dict[str, np.ndarray]:
+    def _run_chain_tiled(self, loops: Sequence[ParallelLoop],
+                         keep_live: frozenset = frozenset()) -> Dict[str, np.ndarray]:
         cfg = self.cfg
         td = cfg.tiled_dim
         t_wall = time.perf_counter()
-        info = analyze_chain(loops, tiled_dim=td)
-        n_tiles = cfg.num_tiles or choose_num_tiles(
-            info, int(cfg.capacity), num_slots=cfg.num_slots
-        )
-        sched = make_tile_schedule(info, n_tiles)
-        slot_bytes = sched.slot_bytes()
-        if cfg.num_slots * slot_bytes > cfg.capacity:
-            raise MemoryError(
-                f"{cfg.num_slots} slots x {slot_bytes}B exceed fast capacity "
-                f"{cfg.capacity}B; increase num_tiles"
-            )
-
-        sig = chain_signature(info)
-        engine = self._engines.get(sig)
-        if engine is None:
-            engine = TileEngine(info)
-            self._engines[sig] = engine
+        n_cached = self.plan_hits
+        plan = self.plan_chain(loops)
+        cache_hit = self.plan_hits > n_cached
+        # On a cache hit the recorded loops are interchangeable with the
+        # plan's (equal structure, dataset objects, kernel fingerprints);
+        # executing the plan's loops keeps the engine's jit cache valid.
+        info, sched, engine = plan.info, plan.sched, plan.engine
+        slot_bytes = plan.slot_bytes
+        sig = plan.sig
 
         ledger = TransferLedger(cfg.hw)
         # Slot allocation: uniform arrays, max footprint length per dat.
@@ -172,7 +263,7 @@ class OutOfCoreExecutor:
 
         reductions: Dict[str, np.ndarray] = {}
         red_specs = {}
-        for lp in loops:
+        for lp in info.loops:
             for r in lp.reductions:
                 red_specs[r.name] = r
 
@@ -325,7 +416,8 @@ class OutOfCoreExecutor:
             for name, pieces in tile.download.items():
                 if name in info.read_only:
                     continue  # never written -> never download
-                if cfg.cyclic and name in info.write_first:
+                if (cfg.cyclic and name in info.write_first
+                        and name not in keep_live):
                     continue  # §4.1 Cyclic: temporaries stay on device
                 for iv in pieces:
                     if iv.empty:
@@ -377,6 +469,8 @@ class OutOfCoreExecutor:
                 modelled_s=makespan,
                 achieved_bw_model=loop_bytes / makespan if makespan else 0.0,
                 slot_bytes=slot_bytes,
+                plan_cache_hit=cache_hit,
+                plan_s=0.0 if cache_hit else plan.plan_s,
             )
         )
         return reductions
@@ -409,11 +503,14 @@ class ResidentExecutor:
         self.history = self._inner.history
 
     def run_chain(self, loops: Sequence[ParallelLoop]) -> Dict[str, np.ndarray]:
-        info = analyze_chain(loops)
-        for name, dat in info.datasets.items():
-            if name not in self._resident:
-                self._resident.add(name)
-                self._resident_bytes += dat.nbytes
+        # Capacity check needs only the touched-dataset set — enumerating
+        # args directly keeps the inner planner's cache stats honest (one
+        # plan per chain, not a self-inflicted hit per run).
+        for lp in loops:
+            for arg in lp.args:
+                if arg.dat.name not in self._resident:
+                    self._resident.add(arg.dat.name)
+                    self._resident_bytes += arg.dat.nbytes
         if self._resident_bytes > self.capacity:
             raise MemoryError(
                 f"resident set {self._resident_bytes}B exceeds fast memory "
@@ -428,6 +525,23 @@ class ResidentExecutor:
         last.modelled_s = max(t, 1e-30)
         last.achieved_bw_model = last.loop_bytes / last.modelled_s
         return reds
+
+    # plan-cache stats proxy to the inner executor (shared planner)
+    @property
+    def plan_hits(self) -> int:
+        return self._inner.plan_hits
+
+    @property
+    def plan_misses(self) -> int:
+        return self._inner.plan_misses
+
+    @property
+    def plan_time_s(self) -> float:
+        return self._inner.plan_time_s
+
+    @property
+    def plan_hit_rate(self) -> float:
+        return self._inner.plan_hit_rate
 
     def average_bandwidth_model(self) -> float:
         tot_b = sum(c.loop_bytes for c in self.history)

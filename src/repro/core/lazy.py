@@ -1,113 +1,43 @@
-"""Lazy execution front end (OPS §3): record loops, flush on data return.
+"""DEPRECATED imperative front end — thin shims over :class:`Session`.
 
-Users enqueue parallel loops; nothing executes until data must be returned
-to user space (``fetch`` of a dataset, or reading a reduction result) — that
-API call is the chain boundary, exactly as in OPS.  At flush time the queued
-chain goes through dependency analysis → skewed tiling → the configured
-executor.
+``Runtime``/``ReferenceRuntime`` were the original lazy-recording API (record
+loops, flush on data return).  That contract now lives in
+:mod:`repro.core.program`; these classes remain so existing code and tests
+keep working, at the cost of a :class:`DeprecationWarning`.  New code should
+use::
 
-``Runtime.cyclic`` is the paper's user flag: set it to True once the
-application enters its cyclic main phase to enable the (unsafe) temporary-
-dataset elision.
+    from repro.core import Session
+    sess = Session("ooc")          # or "reference", "resident", "sim", ...
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+import warnings
 
-import numpy as np
-
-from .block import Block
-from .dataset import Dataset
-from .executor import OOCConfig, OutOfCoreExecutor, ResidentExecutor
-from .loop import Arg, Kernel, ParallelLoop, ReductionSpec
-from .reference import run_chain_reference
+from .backends import ReferenceBackend
+from .program import Session
 
 
-class Runtime:
-    """One lazy-execution context (one per application run)."""
+class Runtime(Session):
+    """Deprecated alias: ``Session`` wrapping an explicit executor object."""
 
-    def __init__(self, executor: Union[OutOfCoreExecutor, ResidentExecutor, None] = None):
-        self.executor = executor if executor is not None else OutOfCoreExecutor()
-        self.queue: List[ParallelLoop] = []
-        self._red_results: Dict[str, np.ndarray] = {}
-        self.chains_flushed = 0
+    def __init__(self, executor=None):
+        warnings.warn(
+            "repro.core.Runtime is deprecated; use repro.core.Session "
+            "(e.g. Session('ooc') or Session(backend=executor))",
+            DeprecationWarning, stacklevel=2)
+        if executor is None:
+            from .executor import OutOfCoreExecutor
 
-    # -- recording -------------------------------------------------------------
-    def par_loop(
-        self,
-        name: str,
-        block: Block,
-        range_: Sequence[Tuple[int, int]],
-        args: Sequence[Arg],
-        kernel: Kernel,
-        reductions: Sequence[ReductionSpec] = (),
-    ) -> None:
-        lp = ParallelLoop(
-            name=name,
-            block=block,
-            range_=tuple(tuple(r) for r in range_),
-            args=tuple(args),
-            kernel=kernel,
-            reductions=tuple(reductions),
-        )
-        self.queue.append(lp)
-
-    # -- the cyclic flag (paper §4.1) -------------------------------------------
-    @property
-    def cyclic(self) -> bool:
-        cfg = getattr(self.executor, "cfg", None)
-        return bool(cfg and cfg.cyclic)
-
-    @cyclic.setter
-    def cyclic(self, value: bool) -> None:
-        cfg = getattr(self.executor, "cfg", None)
-        if cfg is not None:
-            cfg.cyclic = bool(value)
-
-    # -- flushing ---------------------------------------------------------------
-    def flush(self) -> None:
-        """Execute every queued loop, splitting chains at block boundaries."""
-        if not self.queue:
-            return
-        queue, self.queue = self.queue, []
-        chain: List[ParallelLoop] = []
-        for lp in queue:
-            if chain and lp.block is not chain[0].block:
-                self._run(chain)
-                chain = []
-            chain.append(lp)
-        if chain:
-            self._run(chain)
-
-    def _run(self, chain: List[ParallelLoop]) -> None:
-        reds = self.executor.run_chain(chain)
-        self._red_results.update(reds)
-        self.chains_flushed += 1
-
-    # -- data return (chain breakers) --------------------------------------------
-    def fetch(self, dat: Dataset) -> np.ndarray:
-        self.flush()
-        return dat.interior().copy()
-
-    def fetch_raw(self, dat: Dataset) -> np.ndarray:
-        self.flush()
-        return dat.data.copy()
-
-    def reduction(self, name: str) -> np.ndarray:
-        self.flush()
-        if name not in self._red_results:
-            raise KeyError(f"no reduction {name!r} has been produced")
-        return self._red_results.pop(name)
+            executor = OutOfCoreExecutor()
+        super().__init__(backend=executor)
 
 
-class ReferenceRuntime(Runtime):
-    """Same front end, eager NumPy oracle underneath (for tests)."""
+class ReferenceRuntime(Session):
+    """Deprecated alias: ``Session('reference')`` (eager NumPy oracle)."""
 
     def __init__(self):
-        super().__init__(executor=None)
-        self.executor = None
-
-    def _run(self, chain: List[ParallelLoop]) -> None:
-        self._red_results.update(run_chain_reference(chain))
-        self.chains_flushed += 1
+        warnings.warn(
+            "repro.core.ReferenceRuntime is deprecated; use "
+            "repro.core.Session('reference')",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(backend=ReferenceBackend())

@@ -73,15 +73,21 @@ def run_loop_reference(lp: ParallelLoop) -> Dict[str, np.ndarray]:
     return reds
 
 
+def merge_loop_reductions(
+    merged: Dict[str, np.ndarray], lp: ParallelLoop, reds: Dict[str, np.ndarray]
+) -> None:
+    """Fold one loop's reduction results into ``merged`` via each spec's op."""
+    for name, val in reds.items():
+        spec = next(r for r in lp.reductions if r.name == name)
+        if name in merged:
+            merged[name] = np.asarray(spec.combine(merged[name], val))
+        else:
+            merged[name] = val
+
+
 def run_chain_reference(loops: Sequence[ParallelLoop]) -> Dict[str, np.ndarray]:
     """Execute a chain eagerly in program order; merge reductions."""
     merged: Dict[str, np.ndarray] = {}
     for lp in loops:
-        reds = run_loop_reference(lp)
-        for name, val in reds.items():
-            spec = next(r for r in lp.reductions if r.name == name)
-            if name in merged:
-                merged[name] = np.asarray(spec.combine(merged[name], val))
-            else:
-                merged[name] = val
+        merge_loop_reductions(merged, lp, run_loop_reference(lp))
     return merged

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import axis_size, shard_map
+
 
 def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
@@ -31,7 +33,7 @@ def compressed_allreduce_mean(x: jax.Array, axis: str) -> jax.Array:
 
     x: identical-shape per-device local tensor (e.g. a gradient shard).
     """
-    n = lax.axis_size(axis)
+    n = axis_size(axis)
     flat = x.reshape(-1)
     pad = (-flat.size) % n
     flat = jnp.pad(flat, (0, pad))
@@ -76,7 +78,7 @@ def make_pod_grad_allreduce(mesh: Mesh, compress: bool = True):
                     return compressed_allreduce_mean(gl, "pod")
                 return lax.pmean(gl, "pod")
 
-            return jax.shard_map(
+            return shard_map(
                 local, mesh=mesh,
                 in_specs=spec, out_specs=spec, check_vma=False,
             )(g)

@@ -12,6 +12,6 @@ before anything is written back — cache-blocking tiling where Pallas's grid
 pipeline plays the role of the paper's CUDA streams (automatic double
 buffering of HBM<->VMEM block transfers).
 """
-from .ops import chain2d, stencil2d, stencil3d
+from .ops import chain2d, star2d_kernel, star3d_kernel, stencil2d, stencil3d
 
-__all__ = ["stencil2d", "stencil3d", "chain2d"]
+__all__ = ["stencil2d", "stencil3d", "chain2d", "star2d_kernel", "star3d_kernel"]

@@ -1,0 +1,27 @@
+"""Pallas version compat: element-offset overlapping block windows.
+
+Newer JAX exposes per-dimension ``Element`` indexing (overlapping halo
+windows via element offsets in the index map); older releases (e.g. 0.4.x)
+spell the same thing as a whole-spec ``indexing_mode=pl.Unblocked()`` with
+element-granular block shapes and index maps.  ``overlapping_spec`` builds
+the right ``BlockSpec`` for either.
+"""
+from __future__ import annotations
+
+from jax.experimental import pallas as pl
+
+try:  # newest exports
+    from jax.experimental.pallas import Element
+except ImportError:  # pragma: no cover - version fallback
+    try:
+        from jax._src.pallas.core import Element
+    except ImportError:
+        Element = None
+
+
+def overlapping_spec(block_shape, index_map) -> pl.BlockSpec:
+    """BlockSpec whose ``block_shape`` and ``index_map`` are in *elements*."""
+    if Element is not None:
+        return pl.BlockSpec(tuple(Element(b) for b in block_shape), index_map)
+    return pl.BlockSpec(tuple(block_shape), index_map,
+                        indexing_mode=pl.Unblocked())

@@ -22,10 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-try:
-    from jax.experimental.pallas import Element
-except ImportError:  # pragma: no cover
-    from jax._src.pallas.core import Element
+from ._compat import overlapping_spec
 
 
 def _kernel(x_ref, c_ref, o_ref, *, steps: int, halo: int):
@@ -72,8 +69,8 @@ def chain2d_pallas(
         out_shape=jax.ShapeDtypeStruct((H, W), x.dtype),
         grid=(H // bm,),
         in_specs=[
-            pl.BlockSpec(
-                (Element(bm + 2 * K), Element(Wp)),
+            overlapping_spec(
+                (bm + 2 * K, Wp),
                 lambda i: (i * bm, 0),
             ),
             pl.BlockSpec((3,), lambda i: (0,)),

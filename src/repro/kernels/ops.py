@@ -112,3 +112,39 @@ def chain2d(x, coeffs, steps: int, *, block_rows: Optional[int] = None,
     if interpret is None:
         interpret = _default_interpret()
     return _chain2d_jit(x, coeffs, steps, block_rows, interpret)
+
+
+# -- declarative star-sweep kernels (the "pallas" backend's fast path) -----------
+#
+# These build Accessor-kernels for the runtime DSL that also *declare* what
+# they compute via a ``pallas_op`` tag: the pallas backend routes tagged loops
+# through the Pallas kernels above; every other backend just executes the
+# generic accessor formula.  Coefficients are baked in as Python floats so the
+# kernel fingerprint (and hence the chain-plan cache) sees coefficient changes.
+
+
+def star2d_kernel(src: str, dst: str, coeffs):
+    """5-point star sweep kernel: dst = c0*src + cx*(±dim0) + cy*(±dim1)."""
+    c0, cx, cy = (float(c) for c in coeffs)
+
+    def kernel(acc):
+        return {dst: c0 * acc(src)
+                + cx * (acc(src, (1, 0)) + acc(src, (-1, 0)))
+                + cy * (acc(src, (0, 1)) + acc(src, (0, -1)))}
+
+    kernel.pallas_op = ("stencil2d", src, dst, (c0, cx, cy))
+    return kernel
+
+
+def star3d_kernel(src: str, dst: str, coeffs):
+    """7-point star sweep kernel: dst = c0*src + cz/cx/cy * (±each dim)."""
+    c0, cz, cx, cy = (float(c) for c in coeffs)
+
+    def kernel(acc):
+        return {dst: c0 * acc(src)
+                + cz * (acc(src, (1, 0, 0)) + acc(src, (-1, 0, 0)))
+                + cx * (acc(src, (0, 1, 0)) + acc(src, (0, -1, 0)))
+                + cy * (acc(src, (0, 0, 1)) + acc(src, (0, 0, -1)))}
+
+    kernel.pallas_op = ("stencil3d", src, dst, (c0, cz, cx, cy))
+    return kernel

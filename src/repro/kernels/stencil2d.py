@@ -16,10 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-try:  # per-dim element-offset indexing (overlapping halo windows)
-    from jax.experimental.pallas import Element  # newer exports
-except ImportError:  # pragma: no cover - version fallback
-    from jax._src.pallas.core import Element
+from ._compat import overlapping_spec
 
 
 def _kernel(x_ref, c_ref, o_ref, *, halo: int):
@@ -63,8 +60,8 @@ def stencil2d_pallas(
         out_shape=jax.ShapeDtypeStruct((H, W), x.dtype),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(
-                (Element(bm + 2 * halo), Element(Wp)),
+            overlapping_spec(
+                (bm + 2 * halo, Wp),
                 lambda i: (i * bm, 0),
             ),
             pl.BlockSpec((3,), lambda i: (0,)),  # coefficients, replicated

@@ -15,10 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-try:
-    from jax.experimental.pallas import Element
-except ImportError:  # pragma: no cover
-    from jax._src.pallas.core import Element
+from ._compat import overlapping_spec
 
 
 def _kernel(x_ref, c_ref, o_ref, *, halo: int):
@@ -56,8 +53,8 @@ def stencil3d_pallas(
         out_shape=jax.ShapeDtypeStruct((D, H, W), x.dtype),
         grid=(D // bz,),
         in_specs=[
-            pl.BlockSpec(
-                (Element(bz + 2 * halo), Element(Hp), Element(Wp)),
+            overlapping_spec(
+                (bz + 2 * halo, Hp, Wp),
                 lambda i: (i * bz, 0, 0),
             ),
             pl.BlockSpec((4,), lambda i: (0,)),

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+
+from ..compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from .attention import (
@@ -267,7 +269,7 @@ def _moe_sublayer(blk, h, cfg: ModelConfig, mesh):
                 "w_gate": P(None, None), "w_up": P(None, None),
                 "w_down": P(None, None),
             }
-        out = jax.shard_map(
+        out = shard_map(
             fn, mesh=mesh,
             in_specs=(param_specs, P(batch_axes, None, None)),
             out_specs=P(batch_axes, None, None),

@@ -12,9 +12,10 @@ _SCRIPT_HALO = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.compat import make_mesh, shard_map
     from repro.core.distributed import exchange_halos, chain_halo_depth
 
-    mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("x",))
     N, M, halo = 16, 64, 2
     per = M // 8
     rng = np.random.RandomState(0)
@@ -36,8 +37,8 @@ _SCRIPT_HALO = textwrap.dedent("""
             u = 0.5 * u + 0.25 * (jnp.roll(u, 1, 1) + jnp.roll(u, -1, 1))
         return {"u": u}
 
-    fn = jax.jit(jax.shard_map(local, mesh=mesh, in_specs=P(None, "x"),
-                               out_specs=P(None, "x"), check_vma=False))
+    fn = jax.jit(shard_map(local, mesh=mesh, in_specs=P(None, "x"),
+                           out_specs=P(None, "x"), check_vma=False))
     res = np.asarray(fn({"u": garr})["u"])
     outs = [res[:, r * (per + 2 * halo) + halo: r * (per + 2 * halo) + halo + per]
             for r in range(8)]
@@ -52,14 +53,15 @@ _SCRIPT_COMPRESS = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.compat import make_mesh, shard_map
     from repro.distributed.compression import compressed_allreduce_mean
 
-    mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("pod",))
     rng = np.random.RandomState(1)
     per_dev = rng.randn(8, 1000).astype(np.float32)
     x = jax.device_put(per_dev, NamedSharding(mesh, P("pod", None)))
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         lambda g: compressed_allreduce_mean(g[0], "pod")[None],
         mesh=mesh, in_specs=P("pod", None), out_specs=P("pod", None),
         check_vma=False))
@@ -81,8 +83,11 @@ _SCRIPT_COMPRESS = textwrap.dedent("""
 def test_multidevice_subprocess(script, token):
     r = subprocess.run([sys.executable, "-c", script],
                        capture_output=True, text=True, timeout=300,
+                       # JAX_PLATFORMS=cpu: the forced host-device count only
+                       # exists on the CPU platform, and without it JAX may
+                       # stall probing for accelerators (TPU metadata fetch).
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"},
                        cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-3000:]
     assert token in r.stdout

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional test extra: example-based tests run without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import chain2d, stencil2d, stencil3d
 from repro.kernels.ref import chain2d_ref, stencil2d_ref, stencil3d_ref
@@ -59,11 +64,23 @@ class TestChain2D:
         np.testing.assert_allclose(fused, seq, atol=1e-5)
 
 
-@given(h=st.integers(4, 40), w=st.integers(4, 40), steps=st.integers(1, 4),
-       seed=st.integers(0, 999))
-@settings(max_examples=10, deadline=None)
-def test_chain2d_property(h, w, steps, seed):
+def _chain2d_case(h, w, steps, seed):
     rng = np.random.RandomState(seed)
     x = jnp.asarray(rng.rand(h + 2 * steps, w + 2 * steps), jnp.float32)
     np.testing.assert_allclose(chain2d(x, C2, steps), chain2d_ref(x, C2, steps),
                                atol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @given(h=st.integers(4, 40), w=st.integers(4, 40), steps=st.integers(1, 4),
+           seed=st.integers(0, 999))
+    @settings(max_examples=10, deadline=None)
+    def test_chain2d_property(h, w, steps, seed):
+        _chain2d_case(h, w, steps, seed)
+else:
+    @pytest.mark.parametrize("h,w,steps,seed", [
+        (4, 4, 1, 0), (17, 9, 2, 3), (40, 23, 4, 42),
+    ])
+    def test_chain2d_property(h, w, steps, seed):
+        """Fixed-seed fallback when hypothesis is not installed."""
+        _chain2d_case(h, w, steps, seed)
