@@ -49,6 +49,16 @@ from .memory import (
 )
 from .stencil import Stencil, box_stencil, offset_stencil, point_stencil, star_stencil
 from .tiling import TileSchedule, choose_num_tiles, make_tile_schedule
+from .transfer import (
+    Codec,
+    ResidencyError,
+    ResidencyManager,
+    TransferEngine,
+    TransferError,
+    available_codecs,
+    get_codec,
+    register_codec,
+)
 
 __all__ = [
     "Block", "Dataset", "make_dataset", "ChainInfo", "analyze_chain",
@@ -65,4 +75,6 @@ __all__ = [
     "HardwareModel", "TransferLedger", "Stencil", "box_stencil",
     "offset_stencil", "point_stencil", "star_stencil", "TileSchedule",
     "choose_num_tiles", "make_tile_schedule",
+    "Codec", "register_codec", "get_codec", "available_codecs",
+    "TransferEngine", "TransferError", "ResidencyManager", "ResidencyError",
 ]

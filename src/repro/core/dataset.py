@@ -30,6 +30,9 @@ class Dataset:
     dtype: np.dtype
     halo: Tuple[Tuple[int, int], ...]
     data: np.ndarray = field(repr=False, default=None)
+    # Bumped on every user-space ``write``; device-side caches (the residency
+    # manager's pinned arrays) key on it to notice a changed home copy.
+    version: int = field(default=0, compare=False)
 
     def __post_init__(self) -> None:
         if len(self.halo) != self.block.ndim:
@@ -78,6 +81,7 @@ class Dataset:
 
     def write(self, grid_box: Tuple[Tuple[int, int], ...], values: np.ndarray) -> None:
         self.data[self._to_index(tuple(slice(a, b) for a, b in grid_box))] = values
+        self.version += 1
 
     def interior(self) -> np.ndarray:
         """Interior view (no halos) — the usual thing users fetch."""

@@ -48,8 +48,14 @@ def exchange_halos(arrays: Dict[str, jax.Array], depth: int, axis_name: str,
     ``arrays`` are the per-device local shards *including* halo padding of at
     least ``depth`` on each side of ``dim``.  Neighbour interiors are pushed
     into our halo slots with two ``ppermute`` rings (up and down).
+
+    Depth 0 is a fast path: a chain with no reads along ``dim`` (pointwise
+    chains, sweeps along other axes) needs no neighbour data at all, so the
+    collectives are skipped entirely — no ``ppermute``, no axis context
+    required.
     """
-    idx = lax.axis_index(axis_name)
+    if depth <= 0:
+        return dict(arrays)
     n = axis_size(axis_name)
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]

@@ -16,18 +16,25 @@ Data plane: home copies are NumPy (slow memory); slots are JAX device arrays;
 uploads/downloads go through ``jnp.asarray``/``np.asarray`` so the data path
 is real on every backend, while *timings* for the paper's platforms come from
 the calibrated :class:`~repro.core.memory.HardwareModel` ledger.
+
+The transfer layer itself lives in :mod:`repro.core.transfer`: a
+:class:`~repro.core.transfer.TransferEngine` (``transfer="threaded"`` stages
+uploads/downloads on background workers so tile *t+1*'s upload and tile
+*t−1*'s download genuinely overlap tile *t*'s compute; ``"sync"`` is the
+deterministic inline fallback), a
+:class:`~repro.core.transfer.ResidencyManager` (LRU slot pool, dirty-range
+tracking, pinned datasets, capacity accounting), and per-dataset compression
+codecs whose achieved wire bytes are what the ledger charges.
 """
 from __future__ import annotations
 
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from .dependency import ChainInfo, analyze_chain, chain_signature, plan_signature
 from .engine import TileEngine
@@ -39,6 +46,8 @@ from .tiling import (
     choose_num_tiles,
     make_tile_schedule,
 )
+from .transfer import ResidencyManager, TransferEngine, resolve_codecs
+from .transfer.engine import DOWN, UP
 
 
 @dataclass
@@ -54,6 +63,10 @@ class OOCConfig:
     # Schedule/ledger only — no data plane.  For modelled benchmarks at
     # scaled-down sizes (correctness is covered by the executing tests).
     simulate_only: bool = False
+    # -- transfer subsystem knobs --------------------------------------------
+    transfer: str = "sync"                   # "sync" | "threaded"
+    codec: Union[str, Dict[str, str]] = "identity"   # name or {dat: name, "*": ...}
+    pinned: Tuple[str, ...] = ()             # datasets kept device-resident
 
     @property
     def capacity(self) -> float:
@@ -64,8 +77,8 @@ class OOCConfig:
 class ChainStats:
     num_tiles: int
     loop_bytes: int            # the paper's 'useful bytes' for avg-BW metric
-    uploaded: int
-    downloaded: int
+    uploaded: int              # raw (uncompressed) bytes staged up
+    downloaded: int            # raw (uncompressed) bytes staged down
     edge_bytes: int
     prefetch_hits: int
     wall_s: float
@@ -74,6 +87,12 @@ class ChainStats:
     slot_bytes: int
     plan_cache_hit: bool = False   # chain plan replayed from cache
     plan_s: float = 0.0            # analysis + scheduling time (0 on hits)
+    # -- transfer subsystem --------------------------------------------------
+    uploaded_wire: int = 0         # post-codec bytes the link carried up
+    downloaded_wire: int = 0       # post-codec bytes the link carried down
+    compression_ratio: float = 1.0  # raw / wire over both directions
+    queue_wait_s: float = 0.0      # submit-to-start latency summed over tasks
+    transfer_mode: str = "sync"
 
 
 @dataclass
@@ -88,9 +107,20 @@ class ChainPlan:
     info: ChainInfo
     sched: TileSchedule
     engine: TileEngine
-    slot_bytes: int
+    slot_bytes: int     # per-slot bytes, pinned datasets excluded
     sig: Tuple          # structural chain_signature (prefetch guessing)
     plan_s: float       # construction cost (what cache hits save)
+    pinned_names: frozenset = frozenset()   # pinned datasets this chain touches
+    pinned_bytes: int = 0                   # their whole-array residency cost
+
+
+class _SimArray:
+    """Placeholder device array for ``simulate_only`` pinned caching."""
+
+    __slots__ = ("nbytes",)
+
+    def __init__(self, nbytes: int):
+        self.nbytes = int(nbytes)
 
 
 def _region_to_slot(iv: Interval, origin: int) -> Tuple[int, int]:
@@ -112,9 +142,23 @@ class OutOfCoreExecutor:
         self.plan_hits = 0
         self.plan_misses = 0
         self.plan_time_s = 0.0
+        # The transfer subsystem: engine (worker threads or sync fallback)
+        # and residency manager (slot pool, dirty tracking, pinned cache,
+        # capacity accounting) are executor-lifetime so pinned device arrays
+        # and transfer statistics persist across chains.
+        self.transfer = TransferEngine(mode=self.cfg.transfer)
+        self.residency = ResidencyManager(
+            capacity_bytes=self.cfg.capacity, num_slots=self.cfg.num_slots,
+            pinned=frozenset(self.cfg.pinned))
         # Speculative prefetch state: what we uploaded ahead for the next
-        # chain: {dat_name: Interval} plus the signature we guessed from.
-        self._spec_uploaded: Dict[str, Interval] = {}
+        # chain: {dat_name: (Interval, ...)} plus the signature we guessed
+        # from, and — on real data-plane runs — the captured device arrays
+        # backing those intervals ({name: [(Interval, array, dat_id,
+        # dat_version), ...]}).  A hit restores the captured data into the
+        # slot instead of re-staging from home; any identity/version mismatch
+        # degrades to a miss (full upload), never to stale data.
+        self._spec_uploaded: Dict[str, Tuple[Interval, ...]] = {}
+        self._spec_data: Dict[str, list] = {}
         self._spec_sig = None
         self.history: List[ChainStats] = []
 
@@ -154,7 +198,8 @@ class OutOfCoreExecutor:
         (uncached) when no tile count fits, so ``run_chain`` can split."""
         cfg = self.cfg
         key = (plan_signature(loops, cfg.tiled_dim), cfg.num_tiles,
-               cfg.num_slots, float(cfg.capacity))
+               cfg.num_slots, float(cfg.capacity),
+               tuple(sorted(cfg.pinned)))
         plan = self._plans.get(key)
         if plan is not None:
             self._plans.move_to_end(key)
@@ -165,16 +210,16 @@ class OutOfCoreExecutor:
         t0 = time.perf_counter()
         try:
             info = analyze_chain(loops, tiled_dim=cfg.tiled_dim)
+            pinned_names = self.residency.pinned & frozenset(info.datasets)
             n_tiles = cfg.num_tiles or choose_num_tiles(
                 info, int(cfg.capacity), num_slots=cfg.num_slots
             )
             sched = make_tile_schedule(info, n_tiles)
-            slot_bytes = sched.slot_bytes()
-            if cfg.num_slots * slot_bytes > cfg.capacity:
-                raise MemoryError(
-                    f"{cfg.num_slots} slots x {slot_bytes}B exceed fast "
-                    f"capacity {cfg.capacity}B; increase num_tiles"
-                )
+            slot_bytes = sched.slot_bytes(exclude=pinned_names)
+            pinned_bytes = sum(info.datasets[n].nbytes for n in pinned_names)
+            # Single capacity oracle: the same accounting the real path uses
+            # decides whether run_chain must split (raises MemoryError).
+            self.residency.check_fit(slot_bytes, pinned_bytes)
         except MemoryError:
             if len(self._no_fit) >= 8 * self._max_plans:
                 self._no_fit.clear()
@@ -188,6 +233,7 @@ class OutOfCoreExecutor:
             key=key, info=info, sched=sched, engine=TileEngine(info),
             slot_bytes=slot_bytes, sig=chain_signature(info),
             plan_s=time.perf_counter() - t0,
+            pinned_names=pinned_names, pinned_bytes=pinned_bytes,
         )
         self._plans[key] = plan
         if len(self._plans) > self._max_plans:
@@ -200,6 +246,19 @@ class OutOfCoreExecutor:
     def plan_hit_rate(self) -> float:
         tot = self.plan_hits + self.plan_misses
         return self.plan_hits / tot if tot else 0.0
+
+    # -- lifecycle -------------------------------------------------------------
+    def close(self) -> None:
+        """Stop the transfer engine's worker threads.  Optional (they are
+        daemons), but long-lived processes creating many executors should
+        call it — or rely on this running at garbage collection."""
+        self.transfer.close()
+
+    def __del__(self):  # pragma: no cover - interpreter-shutdown timing
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # -- main entry ------------------------------------------------------------
     def run_chain(self, loops: Sequence[ParallelLoop],
@@ -245,21 +304,69 @@ class OutOfCoreExecutor:
         info, sched, engine = plan.info, plan.sched, plan.engine
         slot_bytes = plan.slot_bytes
         sig = plan.sig
+        sim = cfg.simulate_only
+        tx = self.transfer
+        rm = self.residency
+        pinned_names = plan.pinned_names
+        codecs = resolve_codecs(cfg.codec, tuple(info.datasets))
+        tx_before = tx.snapshot()
+
+        def nominal_wire(name: str, nbytes: int) -> int:
+            """Modelled post-codec bytes for simulate_only (no data to encode)."""
+            if not nbytes:
+                return 0
+            ratio = codecs[name].nominal_ratio(info.datasets[name].dtype)
+            return max(1, int(nbytes / ratio))
 
         ledger = TransferLedger(cfg.hw)
-        # Slot allocation: uniform arrays, max footprint length per dat.
-        def fresh_slot():
-            slot = {}
-            for name, ln in sched.max_fp_len.items():
-                dat = info.datasets[name]
-                shape = list(dat.padded_shape)
-                shape[td] = ln
-                slot[name] = jnp.zeros(tuple(shape), dtype=dat.dtype)
-            return slot
+        # Transfer events are recorded with raw sizes up front (dependency
+        # wiring needs the event ids in submission order) and patched with the
+        # achieved post-codec wire bytes after the engine drains.
+        patches: List[Tuple[int, object, str]] = []
 
-        sim = cfg.simulate_only
-        slots = [({} if sim else fresh_slot()) for _ in range(cfg.num_slots)]
-        origins = [dict() for _ in range(cfg.num_slots)]  # per-slot dat origins
+        # ---- pinned datasets: whole-array device residency, cached across
+        # chains while the home copy's version is unchanged --------------------
+        pinned_arrays: Dict[str, object] = {}
+        pinned_origins: Dict[str, int] = {}
+        pinned_written: Set[str] = set()
+        pin_up_raw = pin_up_wire = 0
+        last_upload_eid: Optional[int] = None
+        for name in sorted(pinned_names):
+            dat = info.datasets[name]
+            origin = -dat.halo[td][0]
+            hit = rm.pinned_lookup(dat)
+            if hit is not None:
+                arr, origin = hit
+            elif sim:
+                arr = _SimArray(dat.nbytes)
+                rm.pinned_store(dat, arr, origin)
+                pin_up_raw += dat.nbytes
+                pin_up_wire += nominal_wire(name, dat.nbytes)
+            else:
+                dec, raw, wire = codecs[name].roundtrip(dat.data)
+                arr = jnp.asarray(np.asarray(dec, dtype=dat.dtype))
+                rm.pinned_store(dat, arr, origin)
+                pin_up_raw += raw
+                pin_up_wire += wire
+            pinned_arrays[name] = arr
+            pinned_origins[name] = origin
+        if pin_up_wire:
+            last_upload_eid = ledger.add(
+                1, "upload", pin_up_wire, ledger.t_up(pin_up_wire), ())
+
+        # ---- slot pool: LRU-tracked by the residency manager -----------------
+        slots = rm.begin_chain(cfg.num_slots)
+        if not sim:
+            for slot in slots:
+                arrays = {}
+                for name, ln in sched.max_fp_len.items():
+                    if name in pinned_names:
+                        continue
+                    dat = info.datasets[name]
+                    shape = list(dat.padded_shape)
+                    shape[td] = ln
+                    arrays[name] = jnp.zeros(tuple(shape), dtype=dat.dtype)
+                slot.arrays = arrays
 
         reductions: Dict[str, np.ndarray] = {}
         red_specs = {}
@@ -267,13 +374,19 @@ class OutOfCoreExecutor:
             for r in lp.reductions:
                 red_specs[r.name] = r
 
-        uploaded = downloaded = edge_bytes = 0
+        uploaded = pin_up_raw
+        uploaded_wire = pin_up_wire
+        downloaded = downloaded_wire = edge_bytes = 0
         prefetch_hits = 0
+        num_tiles = sched.num_tiles
         # event ids for stream dependency wiring
         last_compute_eid: Optional[int] = None
-        last_upload_eid: Optional[int] = None
-        last_download_eid: Dict[int, Optional[int]] = {}  # slot -> eid
-        compute_eids: List[Optional[int]] = [None] * sched.num_tiles
+        last_download_eid: Dict[int, Optional[int]] = {}  # slot index -> eid
+        compute_eids: List[Optional[int]] = [None] * num_tiles
+        tile_up_eid: List[Optional[int]] = [None] * num_tiles
+        tile_slot: List = [None] * num_tiles
+        tile_org: List = [None] * num_tiles
+        up_handles: List = [None] * num_tiles
 
         spec_valid = (
             cfg.prefetch
@@ -281,26 +394,49 @@ class OutOfCoreExecutor:
             and self._spec_sig == sig
             and bool(self._spec_uploaded)
         )
+        # Pipelined submission (tile t+1's upload issued during tile t) needs
+        # a second slot to stage into; a 1-slot pool runs strictly in order.
+        early_submit = cfg.num_slots >= 2
 
-        for t, tile in enumerate(sched.tiles):
-            s = t % cfg.num_slots
-            slot = slots[s]
-            org = {name: iv.lo for name, iv in tile.footprint.items() if not iv.empty}
-            origins[s] = org
+        def spec_lookup(name, iv):
+            """Resolve a speculative-prefetch hit for upload piece ``iv``.
 
-            # ---- preparation phase: upload this tile's new data ------------
-            # (Algorithm 1 issues tile t+1's upload during tile t; the ledger
-            # wires that overlap; data-plane order here is sequential & safe.)
-            # Per-tile transfers COALESCE into one ledger event per direction
-            # (one staging copy per tile — at real scale per-dat latencies are
-            # noise; at scaled-down bench sizes they would dominate falsely).
-            up_deps = []
-            if last_download_eid.get(s) is not None:
-                up_deps.append(last_download_eid[s])   # slot reuse fence
-            if last_upload_eid is not None:
-                up_deps.append(last_upload_eid)        # stream-1 FIFO
-            tile_up_bytes = 0
+            Returns ``(miss_part, restore)``: the sub-interval still needing a
+            home upload, and — on real data-plane runs — the captured device
+            array to copy into the slot for the hit part.  A capture whose
+            dataset identity/version no longer matches home degrades to a
+            full miss."""
+            nonlocal prefetch_hits
+            pre = self._spec_uploaded.get(name, ())
+            for j, piv in enumerate(pre):
+                hit = iv.intersect(piv)
+                if hit.empty or hit.lo != iv.lo:
+                    continue
+                if sim:
+                    prefetch_hits += 1
+                    return Interval(hit.hi, iv.hi), None
+                ents = self._spec_data.get(name, ())
+                ent = ents[j] if j < len(ents) else None
+                dat = info.datasets[name]
+                if (ent is not None and ent[0] == piv and ent[2] == id(dat)
+                        and ent[3] == dat.version):
+                    prefetch_hits += 1
+                    return Interval(hit.hi, iv.hi), (name, hit, ent[1], piv.lo)
+                return iv, None  # stale capture: stage everything from home
+            return iv, None
+
+        def upload_plan(t):
+            """Pieces tile t stages up (cold-clamped, prefetch-adjusted)."""
+            tile = sched.tiles[t]
+            org = {name: iv.lo for name, iv in tile.footprint.items()
+                   if not iv.empty}
+            items: List[Tuple[str, Interval]] = []
+            restores: List[Tuple] = []
+            raw = 0
+            conflicts: List = []
             for name, pieces in tile.upload.items():
+                if name in pinned_names:
+                    continue    # whole-array resident: never staged per tile
                 if name in info.write_first:
                     # §4.1: write-first data never uploads — except rows the
                     # chain reads before any write reaches them (halo skirts):
@@ -317,32 +453,132 @@ class OutOfCoreExecutor:
                         continue
                     use = iv
                     if spec_valid and t == 0:
-                        pre = self._spec_uploaded.get(name, ())
-                        for piv in pre:
-                            hit = iv.intersect(piv)
-                            if not hit.empty and hit.lo == iv.lo:
-                                prefetch_hits += 1
-                                use = Interval(hit.hi, iv.hi)  # only the miss part
-                                break
+                        use, restore = spec_lookup(name, iv)
+                        if restore is not None:
+                            restores.append(restore)
                     if use.empty:
                         continue
-                    if not sim:
-                        chunk = self._dat_np_region(info.datasets[name], use)
-                        lo, hi = _region_to_slot(use, org[name])
-                        slot[name] = slot[name].at[
-                            self._slot_slice(slot[name], lo, hi, td)
-                        ].set(jnp.asarray(chunk))
-                    tile_up_bytes += self._nbytes(info.datasets[name], use)
-            if tile_up_bytes:
-                uploaded += tile_up_bytes
-                last_upload_eid = ledger.add(
-                    1, "upload", tile_up_bytes, ledger.t_up(tile_up_bytes),
-                    tuple(up_deps))
+                    raw += self._nbytes(info.datasets[name], use)
+                    items.append((name, use))
+                    # Home rows a still-pending download is writing back must
+                    # land before this staging read (cross-tile safety net;
+                    # the footprint algebra keeps these disjoint in practice).
+                    conflicts.extend(rm.home_conflicts(name, use.lo, use.hi))
+            return org, items, restores, raw, conflicts
+
+        def make_upload_task(slot, org, items, restores=()):
+            def task():
+                raw = wire = 0
+                # Prefetch restores: device-resident captures from the last
+                # chain's speculative upload — no link traffic (it was
+                # charged as the prefetch event back then).
+                for name, hit, arr, arr_lo in restores:
+                    vals = arr[self._slot_slice(
+                        arr, hit.lo - arr_lo, hit.hi - arr_lo, td)]
+                    lo, hi = _region_to_slot(hit, org[name])
+                    with slot.lock:
+                        dst = slot.arrays[name]
+                        slot.arrays[name] = dst.at[
+                            self._slot_slice(dst, lo, hi, td)
+                        ].set(vals)
+                for name, use in items:
+                    dat = info.datasets[name]
+                    chunk = self._dat_np_region(dat, use)
+                    dec, r, w = codecs[name].roundtrip(chunk)
+                    raw += r
+                    wire += w
+                    vals = jnp.asarray(np.asarray(dec, dtype=dat.dtype))
+                    lo, hi = _region_to_slot(use, org[name])
+                    # Disjoint-region updates commute, but the functional
+                    # read-modify-write of the slot's dict entry must be
+                    # atomic against the main thread's edge copy.
+                    with slot.lock:
+                        arr = slot.arrays[name]
+                        slot.arrays[name] = arr.at[
+                            self._slot_slice(arr, lo, hi, td)
+                        ].set(vals)
+                return raw, wire
+            return task
+
+        def submit_upload(t):
+            """Acquire tile t's slot and queue its staging task.
+
+            Per-tile transfers COALESCE into one task/ledger event per
+            direction (one staging pass per tile — at real scale per-dat
+            latencies are noise; at scaled-down bench sizes they would
+            dominate falsely)."""
+            nonlocal last_upload_eid, uploaded, uploaded_wire
+            slot = rm.acquire()
+            org, items, restores, raw, conflicts = upload_plan(t)
+            slot.origins = org
+            tile_slot[t] = slot
+            tile_org[t] = org
+            if not raw and not restores:
+                return
+            up_deps = []
+            if last_download_eid.get(slot.index) is not None:
+                up_deps.append(last_download_eid[slot.index])  # slot reuse fence
+            if last_upload_eid is not None:
+                up_deps.append(last_upload_eid)                # stream-1 FIFO
+            if sim:
+                uploaded += raw
+                wire = sum(
+                    nominal_wire(name, self._nbytes(info.datasets[name], use))
+                    for name, use in items)
+                uploaded_wire += wire
+                eid = ledger.add(1, "upload", wire, ledger.t_up(wire),
+                                 tuple(up_deps))
+            else:
+                handle = tx.submit(UP,
+                                   make_upload_task(slot, org, items, restores),
+                                   deps=conflicts)
+                up_handles[t] = handle
+                for name, use in items:
+                    rm.note_home_read(name, use.lo, use.hi, handle)
+                if not raw:
+                    # Pure prefetch restore: device-side only, no link event
+                    # (the traffic was charged as last chain's prefetch).
+                    return
+                uploaded += raw
+                eid = ledger.add(1, "upload", raw, ledger.t_up(raw),
+                                 tuple(up_deps))
+                patches.append((eid, handle, UP))
+            tile_up_eid[t] = eid
+            last_upload_eid = eid
+
+        def make_download_task(arrays, org, items):
+            def task():
+                raw = wire = 0
+                for name, iv in items:
+                    dat = info.datasets[name]
+                    lo, hi = _region_to_slot(iv, org[name])
+                    arr = arrays[name]
+                    vals = np.asarray(arr[self._slot_slice(arr, lo, hi, td)])
+                    dec, r, w = codecs[name].roundtrip(vals)
+                    raw += r
+                    wire += w
+                    self._write_np_region(dat, iv, np.asarray(dec, dat.dtype))
+                return raw, wire
+            return task
+
+        submit_upload(0)
+        for t, tile in enumerate(sched.tiles):
+            slot = tile_slot[t]
+            org = tile_org[t]
+
+            # ---- preparation phase: tile t's staging must have landed -------
+            if up_handles[t] is not None:
+                up_handles[t].wait()
+            # Algorithm 1: issue tile t+1's upload now, so in threaded mode it
+            # genuinely overlaps this tile's compute (the ledger wires the
+            # same overlap into the modelled timeline either way).
+            if t + 1 < num_tiles and early_submit:
+                submit_upload(t + 1)
 
             # ---- execution phase -------------------------------------------
             comp_deps = []
-            if last_upload_eid is not None:
-                comp_deps.append(last_upload_eid)
+            if tile_up_eid[t] is not None:
+                comp_deps.append(tile_up_eid[t])
             if last_compute_eid is not None:
                 comp_deps.append(last_compute_eid)
             tile_bytes = 0
@@ -361,9 +597,14 @@ class OutOfCoreExecutor:
                 tile_bytes += int(lp.bytes_moved() * frac)
                 tile_flops += int(lp.flops(cfg.flops_per_point) * frac)
             if not sim:
-                new_slot, tile_reds = engine.run_tile(tile, slot, org)
-                slots[s] = new_slot
-                slot = new_slot
+                run_arrays = {**slot.arrays, **pinned_arrays}
+                run_origins = {**org, **pinned_origins}
+                new_arrays, tile_reds = engine.run_tile(tile, run_arrays, run_origins)
+                for name in pinned_arrays:
+                    pinned_arrays[name] = new_arrays[name]
+                    rm.pinned_update(info.datasets[name], new_arrays[name])
+                slot.arrays = {n: a for n, a in new_arrays.items()
+                               if n not in pinned_arrays}
                 for name, val in tile_reds.items():
                     spec = red_specs[name]
                     if name in reductions:
@@ -376,33 +617,58 @@ class OutOfCoreExecutor:
                 tuple(comp_deps),
             )
             compute_eids[t] = last_compute_eid
+            # Residency bookkeeping: rows this tile wrote stay dirty until a
+            # download, an edge carry, or a §4.1 elision retires them — the
+            # manager refuses slot reuse (and chain end) while any survive.
+            for k, box in enumerate(tile.loop_ranges):
+                if box is None:
+                    continue
+                lo_w, hi_w = box[td]
+                for arg in info.loops[k].args:
+                    if not arg.mode.writes:
+                        continue
+                    if arg.dat.name in pinned_names:
+                        pinned_written.add(arg.dat.name)
+                    else:
+                        rm.mark_dirty(slot, arg.dat.name, lo_w, hi_w)
 
             # ---- finishing phase --------------------------------------------
-            # Edge copy: right edge of tile t -> left edge region of slot t+1.
-            if t + 1 < sched.num_tiles:
-                nslot_i = (t + 1) % cfg.num_slots
-                next_tile = sched.tiles[t + 1]
-                next_org = {
-                    name: iv.lo
-                    for name, iv in next_tile.footprint.items()
-                    if not iv.empty
-                }
+            def do_edge():
+                """Edge copy: right edge of tile t -> slot of tile t+1."""
+                nonlocal edge_bytes, last_compute_eid
+                if t + 1 >= num_tiles:
+                    return
+                next_slot = tile_slot[t + 1]
+                if next_slot is None:
+                    # 1-slot pool (late submit): tile t+1 continues in this
+                    # very slot — rebase from this tile's origins to the next
+                    # tile's BEFORE its upload lands in the rebased positions.
+                    next_slot = slot
+                    next_org = {
+                        name: iv.lo
+                        for name, iv in sched.tiles[t + 1].footprint.items()
+                        if not iv.empty
+                    }
+                else:
+                    next_org = tile_org[t + 1]
                 edge_deps = [last_compute_eid]
-                if last_download_eid.get(nslot_i) is not None:
-                    edge_deps.append(last_download_eid[nslot_i])
+                if last_download_eid.get(next_slot.index) is not None:
+                    edge_deps.append(last_download_eid[next_slot.index])
                 tile_edge_bytes = 0
                 for name, iv in tile.edge_to_next.items():
-                    if iv.empty or name not in next_org:
+                    if iv.empty or name not in next_org or name in pinned_names:
                         continue
                     if not sim:
                         src_lo, src_hi = _region_to_slot(iv, org[name])
                         dst_lo, dst_hi = _region_to_slot(iv, next_org[name])
-                        src = slots[s][name]
-                        dst = slots[nslot_i][name]
+                        src = slot.arrays[name]
                         vals = src[self._slot_slice(src, src_lo, src_hi, td)]
-                        slots[nslot_i][name] = dst.at[
-                            self._slot_slice(dst, dst_lo, dst_hi, td)
-                        ].set(vals)
+                        with next_slot.lock:
+                            dst = next_slot.arrays[name]
+                            next_slot.arrays[name] = dst.at[
+                                self._slot_slice(dst, dst_lo, dst_hi, td)
+                            ].set(vals)
+                    rm.carry(slot, next_slot, name, iv.lo, iv.hi)
                     tile_edge_bytes += self._nbytes(info.datasets[name], iv)
                 if tile_edge_bytes:
                     edge_bytes += tile_edge_bytes
@@ -410,53 +676,160 @@ class OutOfCoreExecutor:
                         0, "edge", tile_edge_bytes,
                         ledger.t_dd(2 * tile_edge_bytes), tuple(edge_deps))
 
-            # Download left footprint of modified datasets.
-            dn_deps = [compute_eids[t]]
-            tile_dn_bytes = 0
-            for name, pieces in tile.download.items():
-                if name in info.read_only:
-                    continue  # never written -> never download
-                if (cfg.cyclic and name in info.write_first
-                        and name not in keep_live):
-                    continue  # §4.1 Cyclic: temporaries stay on device
-                for iv in pieces:
-                    if iv.empty:
+            def do_downloads():
+                """Download the left footprint of modified datasets."""
+                nonlocal downloaded, downloaded_wire
+                dn_deps = [compute_eids[t]]
+                items: List[Tuple[str, Interval]] = []
+                raw = 0
+                for name, pieces in tile.download.items():
+                    if name in pinned_names or name in info.read_only:
+                        continue  # never written / flushed once at chain end
+                    if (cfg.cyclic and name in info.write_first
+                            and name not in keep_live):
+                        # §4.1 Cyclic: temporaries stay on device — no
+                        # traffic, but the residency books must balance.
+                        for iv in pieces:
+                            if not iv.empty:
+                                rm.elide(slot, name, iv.lo, iv.hi)
                         continue
-                    if not sim:
-                        lo, hi = _region_to_slot(iv, org[name])
-                        arr = slots[s][name]
-                        vals = np.asarray(arr[self._slot_slice(arr, lo, hi, td)])
-                        self._write_np_region(info.datasets[name], iv, vals)
-                    tile_dn_bytes += self._nbytes(info.datasets[name], iv)
-            if tile_dn_bytes:
-                downloaded += tile_dn_bytes
-                eid = ledger.add(2, "download", tile_dn_bytes,
-                                 ledger.t_down(tile_dn_bytes), tuple(dn_deps))
-                last_download_eid[s] = eid
+                    for iv in pieces:
+                        if iv.empty:
+                            continue
+                        raw += self._nbytes(info.datasets[name], iv)
+                        items.append((name, iv))
+                if not raw:
+                    return
+                downloaded += raw
+                if sim:
+                    wire = sum(
+                        nominal_wire(name, self._nbytes(info.datasets[name], iv))
+                        for name, iv in items)
+                    downloaded_wire += wire
+                    eid = ledger.add(2, "download", wire, ledger.t_down(wire),
+                                     tuple(dn_deps))
+                    for name, iv in items:
+                        rm.writeback(slot, name, iv.lo, iv.hi)
+                else:
+                    # Snapshot the arrays: a later tile's upload functionally
+                    # replaces dict entries, never the captured values.  The
+                    # home write must also wait for earlier-queued uploads
+                    # still reading overlapping home rows (tile t+1's upload
+                    # is submitted before tile t's download).
+                    read_deps = [
+                        h for name, iv in items
+                        for h in rm.home_read_conflicts(name, iv.lo, iv.hi)]
+                    handle = tx.submit(
+                        DOWN, make_download_task(dict(slot.arrays), org, items),
+                        deps=read_deps)
+                    eid = ledger.add(2, "download", raw, ledger.t_down(raw),
+                                     tuple(dn_deps))
+                    patches.append((eid, handle, DOWN))
+                    for name, iv in items:
+                        rm.writeback(slot, name, iv.lo, iv.hi, handle)
+                last_download_eid[slot.index] = eid
+
+            if early_submit:
+                do_edge()
+                do_downloads()
+            else:
+                # 1-slot pool: retire this tile before staging the next one
+                # into the same (continuing) slot.
+                do_downloads()
+                do_edge()
+                if t + 1 < num_tiles:
+                    submit_upload(t + 1)
 
             # Speculative prefetch (§4.1): during the last tile, upload the
             # next chain's assumed first tile (assume it mirrors this chain).
-            if cfg.prefetch and t == sched.num_tiles - 1:
+            if cfg.prefetch and t == num_tiles - 1:
                 first = sched.tiles[0]
                 nb_total = 0
                 self._spec_uploaded = {}
                 for name, pieces in first.upload.items():
-                    if name in info.write_first:
+                    if name in info.write_first or name in pinned_names:
                         continue
                     live = tuple(iv for iv in pieces if not iv.empty)
                     if not live:
                         continue
                     self._spec_uploaded[name] = live
-                    nb_total += sum(self._nbytes(info.datasets[name], iv) for iv in live)
+                    # Charge at nominal post-codec size so prefetch traffic
+                    # is priced consistently with the uploads it replaces.
+                    nb_total += sum(
+                        nominal_wire(name, self._nbytes(info.datasets[name], iv))
+                        for iv in live)
                 if nb_total:
                     # Overlaps the last compute on stream 1.
                     ledger.add(1, "prefetch", nb_total, ledger.t_up(nb_total),
-                               (last_upload_eid,) if last_upload_eid else ())
+                               (last_upload_eid,) if last_upload_eid is not None else ())
                 self._spec_sig = sig
+
+        tx.drain()
+        # Patch transfer events with the achieved wire bytes (codec output is
+        # data-dependent, so threaded tasks only report it after the fact).
+        # ``ledger.totals`` accumulated the raw estimate at submission and
+        # must shift by the same delta to stay consistent with the events.
+        for eid, handle, direction in patches:
+            _, wire = handle.result
+            ev = ledger.events[eid]
+            ledger.totals[ev.kind] = ledger.totals.get(ev.kind, 0) + wire - ev.nbytes
+            ev.nbytes = wire
+            ev.duration = (ledger.t_up(wire) if direction == UP
+                           else ledger.t_down(wire))
+            if direction == UP:
+                uploaded_wire += wire
+            else:
+                downloaded_wire += wire
+
+        # Speculative-prefetch data capture (real data plane): home is stable
+        # now that downloads have drained, so snapshot the regions the next
+        # chain's first tile is assumed to upload.  ``jnp.array`` copies —
+        # the capture must not alias home rows a later chain will overwrite.
+        if cfg.prefetch and not sim:
+            self._spec_data = {}
+            for name, ivs in self._spec_uploaded.items():
+                dat = info.datasets.get(name)
+                if dat is None:
+                    continue
+                self._spec_data[name] = [
+                    (iv, jnp.array(self._dat_np_region(dat, iv)), id(dat),
+                     dat.version)
+                    for iv in ivs]
+
+        # Pinned flush: written pinned datasets ship home once per chain.
+        pin_dn_raw = pin_dn_wire = 0
+        for name in sorted(pinned_written):
+            dat = info.datasets[name]
+            rows = info.written.get(name, [])
+            if sim:
+                nb = sum(self._nbytes(dat, Interval(lo, hi)) for lo, hi in rows)
+                pin_dn_raw += nb
+                pin_dn_wire += nominal_wire(name, nb)
+            else:
+                arr = pinned_arrays[name]
+                origin = pinned_origins[name]
+                for lo, hi in rows:
+                    vals = np.asarray(arr[self._slot_slice(
+                        arr, lo - origin, hi - origin, td)])
+                    dec, r, w = codecs[name].roundtrip(vals)
+                    pin_dn_raw += r
+                    pin_dn_wire += w
+                    self._write_np_region(dat, Interval(lo, hi),
+                                          np.asarray(dec, dat.dtype))
+            rm.pinned_mark_flushed(dat)
+        if pin_dn_wire:
+            downloaded += pin_dn_raw
+            downloaded_wire += pin_dn_wire
+            ledger.add(2, "download", pin_dn_wire, ledger.t_down(pin_dn_wire),
+                       (last_compute_eid,) if last_compute_eid is not None else ())
+        rm.end_chain()
 
         makespan = ledger.simulate()
         wall = time.perf_counter() - t_wall
         loop_bytes = info.loop_bytes()
+        tx_delta = tx.delta(tx.snapshot(), tx_before)
+        raw_total = uploaded + downloaded
+        wire_total = uploaded_wire + downloaded_wire
         self.history.append(
             ChainStats(
                 num_tiles=sched.num_tiles,
@@ -471,6 +844,11 @@ class OutOfCoreExecutor:
                 slot_bytes=slot_bytes,
                 plan_cache_hit=cache_hit,
                 plan_s=0.0 if cache_hit else plan.plan_s,
+                uploaded_wire=uploaded_wire,
+                downloaded_wire=downloaded_wire,
+                compression_ratio=raw_total / wire_total if wire_total else 1.0,
+                queue_wait_s=tx_delta.get("queue_wait_s", 0.0),
+                transfer_mode=tx.mode,
             )
         )
         return reductions
@@ -481,6 +859,31 @@ class OutOfCoreExecutor:
         tot_b = sum(c.loop_bytes for c in self.history)
         tot_t = sum(c.modelled_s for c in self.history)
         return tot_b / tot_t if tot_t else 0.0
+
+    def transfer_stats(self) -> Dict[str, float]:
+        """Transfer-subsystem totals over everything run so far: raw vs wire
+        bytes each direction, the achieved compression ratio, and queue-wait
+        (submit-to-start latency; real queueing in threaded mode, a few
+        microseconds of inline dispatch overhead per task in sync mode)."""
+        up_raw = sum(c.uploaded for c in self.history)
+        dn_raw = sum(c.downloaded for c in self.history)
+        up_wire = sum(c.uploaded_wire for c in self.history)
+        dn_wire = sum(c.downloaded_wire for c in self.history)
+        wire = up_wire + dn_wire
+        rs = self.residency.stats
+        return {
+            "mode": self.transfer.mode,
+            "bytes_up_raw": up_raw,
+            "bytes_down_raw": dn_raw,
+            "bytes_up_wire": up_wire,
+            "bytes_down_wire": dn_wire,
+            "bytes_moved_wire": wire,
+            "compression_ratio": (up_raw + dn_raw) / wire if wire else 1.0,
+            "queue_wait_s": sum(c.queue_wait_s for c in self.history),
+            "elided_rows": rs["elided_rows"],
+            "evictions": rs["evictions"],
+            "pinned_hits": rs["pinned_hits"],
+        }
 
 
 class ResidentExecutor:
@@ -542,6 +945,9 @@ class ResidentExecutor:
     @property
     def plan_hit_rate(self) -> float:
         return self._inner.plan_hit_rate
+
+    def transfer_stats(self) -> Dict[str, float]:
+        return self._inner.transfer_stats()
 
     def average_bandwidth_model(self) -> float:
         tot_b = sum(c.loop_bytes for c in self.history)

@@ -66,6 +66,10 @@ class ExecutionConfig:
     flops_per_point: Optional[int] = None
     simulate_only: bool = False              # schedule/ledger only
     validate_stencils: bool = False          # cross-check declared Args vs trace
+    # -- transfer subsystem (repro.core.transfer) -----------------------------
+    transfer: str = "sync"                   # "sync" | "threaded" workers
+    codec: Union[str, Dict[str, str]] = "identity"   # per-dat: {"dat": name, "*": ...}
+    pinned: Tuple[str, ...] = ()             # datasets kept device-resident
 
     def __post_init__(self) -> None:
         if isinstance(self.hw, str):
@@ -85,6 +89,8 @@ class ExecutionConfig:
             tiled_dim=self.tiled_dim, cyclic=self.cyclic,
             prefetch=self.prefetch, flops_per_point=self.flops_per_point,
             simulate_only=self.simulate_only,
+            transfer=self.transfer, codec=self.codec,
+            pinned=tuple(self.pinned),
         )
         kw.update(overrides)
         return OOCConfig(**kw)
@@ -509,6 +515,28 @@ class Session:
             "plan_misses": misses,
             "plan_hit_rate": hits / tot if tot else 0.0,
             "plan_time_s": getattr(self.backend, "plan_time_s", 0.0),
+        }
+
+    def close(self) -> None:
+        """Flush pending loops and release backend resources (the threaded
+        transfer engine's worker threads, for ``ooc``-family backends)."""
+        self.flush()
+        fn = getattr(self.backend, "close", None)
+        if fn is not None:
+            fn()
+
+    def transfer_stats(self) -> Dict[str, float]:
+        """Transfer-subsystem counters: raw vs post-codec wire bytes, the
+        achieved compression ratio, and queue-wait time (zeros/defaults for
+        backends without a transfer engine)."""
+        fn = getattr(self.backend, "transfer_stats", None)
+        if fn is not None:
+            return fn()
+        return {
+            "mode": "none", "bytes_up_raw": 0, "bytes_down_raw": 0,
+            "bytes_up_wire": 0, "bytes_down_wire": 0, "bytes_moved_wire": 0,
+            "compression_ratio": 1.0, "queue_wait_s": 0.0,
+            "elided_rows": 0, "evictions": 0, "pinned_hits": 0,
         }
 
 

@@ -117,12 +117,16 @@ class TileSchedule:
     def num_tiles(self) -> int:
         return len(self.tiles)
 
-    def slot_bytes(self) -> int:
+    def slot_bytes(self, exclude: frozenset = frozenset()) -> int:
         """Fast-memory bytes one slot occupies (slab: full extent in the
-        non-tiled dims, max footprint in the tiled dim)."""
+        non-tiled dims, max footprint in the tiled dim).  ``exclude`` names
+        datasets staged outside the slot pool (pinned: whole-array resident,
+        accounted separately by the residency manager)."""
         total = 0
         td = self.chain.tiled_dim
         for name, ln in self.max_fp_len.items():
+            if name in exclude:
+                continue
             dat = self.chain.datasets[name]
             other = 1
             for d, s in enumerate(dat.padded_shape):

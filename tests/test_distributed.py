@@ -76,6 +76,38 @@ _SCRIPT_COMPRESS = textwrap.dedent("""
 """)
 
 
+def test_depth0_exchange_skips_collective():
+    """A 0-depth chain (no reads along the decomposed dim) must skip the
+    halo collective entirely.  Regression: the fast path needs no axis
+    context, so calling it OUTSIDE shard_map must work — the old code
+    always issued ``axis_index``/``ppermute`` and would raise here."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import Block, make_dataset, point_stencil, Arg, RW
+    from repro.core.distributed import chain_halo_depth, exchange_halos
+    from repro.core.loop import ParallelLoop
+
+    arrays = {"u": jnp.arange(12.0).reshape(3, 4),
+              "v": jnp.ones((3, 4))}
+    out = exchange_halos(arrays, 0, "nonexistent-axis", dim=1)
+    assert set(out) == {"u", "v"}
+    for k in arrays:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(arrays[k]))
+
+    # A pointwise chain really does have accumulated halo depth 0.
+    blk = Block("g", (8, 8))
+    a = make_dataset(blk, "a", halo=1)
+    Z = point_stencil(2)
+    loops = [
+        ParallelLoop("scale", blk, blk.full_range(), (Arg(a, Z, RW),),
+                     lambda acc: {"a": acc("a") * 2.0}),
+        ParallelLoop("damp", blk, blk.full_range(), (Arg(a, Z, RW),),
+                     lambda acc: {"a": acc("a") * 0.5}),
+    ]
+    assert chain_halo_depth(loops, dim=1) == 0
+
+
 @pytest.mark.parametrize("script,token", [
     (_SCRIPT_HALO, "HALO_OK"),
     (_SCRIPT_COMPRESS, "COMPRESS_OK"),
