@@ -6,9 +6,18 @@
   kernels   -> kernel_bench   (Pallas stencil kernels + VMEM-chain model)
 
 Prints ``name,value,derived`` CSV lines; writes reports/bench_results.json.
+
+Flags:
+  ``--tune``      add the Plan-IR autotuner section (sim-costed config sweep
+                  on the transfer-bound CloverLeaf2D setup)
+  ``--simulate``  sim-mode smoke only: plan/explain/JSON round-trip + (with
+                  ``--tune``) the tuner, on a small grid, no data plane and
+                  no Pallas — the CI guard against planner/tuner regressions.
+                  Writes reports/bench_sim.json instead.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -79,7 +88,105 @@ def transfer_bench(steps: int = 2):
     return rows
 
 
-def main() -> None:
+def _transfer_bound_session(nx=48, ny=32, num_tiles=4, capacity_frac=0.5):
+    """One recorded CloverLeaf2D timestep on a slow-link model with fast
+    memory sized so the chain *must* tile — the setup where plan choices
+    actually move the modelled makespan."""
+    from repro.apps import CloverLeaf2D
+    from repro.core import P100_PCIE, Session
+
+    hw = P100_PCIE.with_(link_latency=1e-6, up_bw=2e9, down_bw=2e9)
+    app = CloverLeaf2D(nx, ny, summary_every=0)
+    sess = Session("sim", hw=hw, num_tiles=num_tiles,
+                   capacity_bytes=app.total_bytes() * capacity_frac)
+    app.record_init(sess)
+    sess.queue.clear()
+    app.dt = 1e-4
+    app.record_timestep(sess)
+    return app, sess
+
+
+def tune_bench():
+    """Autotune the transfer-bound setup via the sim interpreter: enumerate
+    num_tiles x tiled_dim x num_slots (codec fixed lossless), cost each
+    candidate's Plan IR, report the winner vs the default config."""
+    app, sess = _transfer_bound_session()
+    t0 = time.perf_counter()
+    res = sess.tune()
+    tune_s = time.perf_counter() - t0
+    best = res.best
+    return {
+        "candidates": len(res.rows),
+        "feasible": sum(1 for r in res.rows if r["feasible"]),
+        "baseline_modelled_s": res.baseline_makespan,
+        "best_modelled_s": res.best_makespan,
+        "speedup": res.speedup,
+        "best": {"num_tiles": best.num_tiles, "num_slots": best.num_slots,
+                 "tiled_dim": best.tiled_dim, "codec": best.codec},
+        "tune_s": tune_s,
+        "rows": res.rows,
+    }
+
+
+def sim_smoke():
+    """Planner smoke (no data plane): plan + explain + JSON round-trip + a
+    sim-interpreted flush on a small CloverLeaf2D chain.  Fails loudly on
+    any planner/interpreter/serialisation regression."""
+    from repro.core import Plan
+
+    app, sess = _transfer_bound_session(nx=40, ny=24)
+    plans = sess.plan()
+    text = sess.explain()
+    assert "modelled makespan" in text, "explain() lost its makespan line"
+    for p in plans:
+        back = Plan.from_json(p.to_json())
+        assert back == p, "plan JSON round-trip is not lossless"
+    sess.flush()
+    chain = sess.history[-1]
+    assert chain.op_counts == plans[-1].counts(), \
+        "executed op counts diverge from the planned stream"
+    return {
+        "chains": len(plans),
+        "ops": {k: sum(p.counts()[k] for p in plans)
+                for k in plans[0].counts()},
+        "modelled_s": sum(c.modelled_s for c in sess.history),
+        "explain_lines": len(text.splitlines()),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tune", action="store_true",
+                    help="include the Plan-IR autotuner section")
+    ap.add_argument("--simulate", action="store_true",
+                    help="sim-mode smoke only (fast; no data plane/Pallas)")
+    args = ap.parse_args(argv)
+
+    if args.simulate:
+        results = {}
+        t0 = time.time()
+        print("== Sim smoke: plan/explain/JSON round-trip ==")
+        sm = sim_smoke()
+        results["sim_smoke"] = sm
+        print(f"chains,{sm['chains']},modelled={sm['modelled_s'] * 1e3:.2f}ms")
+        print("ops," + ",".join(f"{k}={v}" for k, v in sm["ops"].items() if v))
+        if args.tune:
+            print("\n== Plan-IR autotuner (sim-costed) ==")
+            tn = tune_bench()
+            results["tune"] = tn
+            print(f"tune_candidates,{tn['candidates']},"
+                  f"{tn['feasible']} feasible, {tn['tune_s']:.2f}s")
+            print(f"tune_speedup,{tn['speedup']:.2f},best={tn['best']} vs "
+                  f"default {tn['baseline_modelled_s'] * 1e3:.2f}ms")
+            assert tn["best_modelled_s"] <= tn["baseline_modelled_s"], \
+                "tuner returned a config worse than the default"
+        os.makedirs("reports", exist_ok=True)
+        with open("reports/bench_sim.json", "w") as f:
+            json.dump(results, f, indent=1, default=float)
+        print(f"\nsim bench time: {time.time() - t0:.0f}s; "
+              f"results -> reports/bench_sim.json")
+        return
+
     from . import gpu_scaling, kernel_bench, paper_scaling, um_scaling
 
     results = {}
@@ -117,6 +224,15 @@ def main() -> None:
               f"modelled={r['modelled_s'] * 1e3:.2f}ms,"
               f"queue_wait={r['queue_wait_s'] * 1e3:.1f}ms,"
               f"{speed:.2f}x vs identity")
+
+    if args.tune:
+        print("\n== Plan-IR autotuner (sim-costed) ==")
+        tn = tune_bench()
+        results["tune"] = tn
+        print(f"tune_candidates,{tn['candidates']},{tn['feasible']} feasible")
+        print(f"tune_speedup,{tn['speedup']:.2f},best={tn['best']} "
+              f"({tn['best_modelled_s'] * 1e3:.2f}ms vs default "
+              f"{tn['baseline_modelled_s'] * 1e3:.2f}ms)")
 
     # headline reproduction checks (paper §5/§6 claims, at 3x capacity)
     print("\n== Reproduction checks vs paper claims ==")

@@ -93,6 +93,14 @@ def run(ratios=(0.5, 1.0, 1.5, 2.0, 3.0)) -> List[Dict]:
                 "compression_ratio": raw / wire if wire else 1.0,
                 "queue_wait_s": sum(c.queue_wait_s for c in steady),
             }
+            # Plan-IR op counts, straight from each chain's instruction
+            # stream (ChainStats.op_counts) — no re-derivation from ledger
+            # events needed.
+            row["ops"] = {
+                k: sum(c.op_counts.get(k, 0) for c in steady)
+                for k in ("uploads", "downloads", "carries", "elisions",
+                          "evictions")
+            }
             rows.append(row)
     return rows
 
@@ -100,12 +108,15 @@ def run(ratios=(0.5, 1.0, 1.5, 2.0, 3.0)) -> List[Dict]:
 def main():
     rows = run()
     print("app,ratio,um,um_tiled,um_tiled_prefetch (GB/s),plan_hit_rate,"
-          "explicit_wire_MB")
+          "explicit_wire_MB,ops(up/down/carry/evict)")
     for r in rows:
+        ops = r["ops"]
         print(f"{r['app']},{r['ratio']},{r['um_gbs']:.1f},"
               f"{r['um_tiled_gbs']:.1f},{r['um_tiled_prefetch_gbs']:.1f},"
               f"{r['plan_hit_rate']:.2f},"
-              f"{r['transfer']['bytes_moved_wire'] / 1e6:.1f}")
+              f"{r['transfer']['bytes_moved_wire'] / 1e6:.1f},"
+              f"{ops['uploads']}/{ops['downloads']}/{ops['carries']}/"
+              f"{ops['evictions']}")
     return rows
 
 

@@ -40,6 +40,23 @@ def main():
     problem_bytes = 2 * 514 * 258 * 4
     hw = TPU_V5E.with_(fast_capacity=problem_bytes // 4)
     sess = Session("ooc", hw=hw, cyclic=True, prefetch=True)
+
+    # Inspect the Plan IR before anything executes: record one step, ask the
+    # planner for the typed instruction stream and its modelled makespan.
+    blk = Block("preview", (512, 256))
+    rng = np.random.RandomState(0)
+    pu = make_dataset(blk, "u", halo=1,
+                      init=rng.rand(512, 256).astype(np.float32))
+    pt = make_dataset(blk, "tmp", halo=1)
+    box = ((1, 511), (1, 255))
+    sess.par_loop("p_diffuse", blk, box, [pu, pt],
+                  star2d_kernel("u", "tmp", (0.0, 0.25, 0.25)))
+    sess.par_loop("p_commit", blk, box, [pt, pu], lambda acc: {"u": acc("tmp")})
+    print("--- Session.explain(): the chain's instruction stream ---")
+    print("\n".join(sess.explain().splitlines()[:10]))
+    print("    ...\n")
+    sess.queue.clear()          # preview only — nothing ran
+
     got = heat(sess)
 
     assert np.allclose(ref, got, atol=1e-5), "out-of-core result mismatch!"

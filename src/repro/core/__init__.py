@@ -17,7 +17,32 @@ from .executor import (
     OutOfCoreExecutor,
     ResidentExecutor,
 )
+from .interp import (
+    DataPlaneInterpreter,
+    InterpResult,
+    LedgerInterpreter,
+    SpecState,
+    simulate_plan,
+)
 from .lazy import ReferenceRuntime, Runtime
+from .plan import (
+    CarryEdge,
+    Compute,
+    Download,
+    Elide,
+    Evict,
+    PinUpload,
+    Plan,
+    PlanOp,
+    Prefetch,
+    Upload,
+    WritebackPinned,
+    build_plan,
+    format_plan,
+    plans_from_json,
+    plans_to_json,
+)
+from .tune import TuneResult, tune_configs
 from .program import (
     ExecutionConfig,
     Session,
@@ -77,4 +102,9 @@ __all__ = [
     "choose_num_tiles", "make_tile_schedule",
     "Codec", "register_codec", "get_codec", "available_codecs",
     "TransferEngine", "TransferError", "ResidencyManager", "ResidencyError",
+    "Plan", "PlanOp", "Upload", "Download", "Compute", "CarryEdge", "Elide",
+    "Evict", "Prefetch", "PinUpload", "WritebackPinned", "build_plan",
+    "format_plan", "plans_to_json", "plans_from_json",
+    "LedgerInterpreter", "DataPlaneInterpreter", "InterpResult", "SpecState",
+    "simulate_plan", "TuneResult", "tune_configs",
 ]

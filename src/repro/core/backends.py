@@ -16,11 +16,18 @@ Built-ins:
 ``ooc-async``   ``ooc`` with the threaded transfer engine: staging on
                 background workers overlapping compute (bit-identical output)
 ``ooc-cyclic``  ``ooc`` with the §4.1 unsafe-temporaries elision pre-enabled
-``sim``         ``ooc`` schedule/ledger only — no data plane (modelled runs)
+``sim``         ``ooc`` without the data plane: the same Plan IR stream,
+                interpreted by the ledger interpreter only (modelled runs)
 ``pallas``      eager backend routing tagged star-sweep loops through the
                 Pallas TPU kernels in :mod:`repro.kernels` (fast path), with
                 the reference path for everything else
 ==============  ===============================================================
+
+The ``ooc``-family backends (including ``sim`` and ``resident``'s inner
+executor) all lower chains to the typed instruction stream of
+:mod:`repro.core.plan` and execute it through the shared interpreters in
+:mod:`repro.core.interp` — ``Session.plan()``/``explain()``/``tune()`` work
+on any of them.
 
 Register your own with::
 

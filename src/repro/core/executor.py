@@ -9,6 +9,18 @@ never upload, Cyclic additionally skips the download of write-first
 temporaries, and speculative prefetch uploads the *next* chain's first tile
 during the current chain's last tile.
 
+Since the Plan-IR redesign the executor is a thin planner/interpreter pair:
+
+* :meth:`plan_chain` lowers a chain to an explicit, typed instruction
+  stream (:class:`~repro.core.plan.Plan`) via dependency analysis + skewed
+  tile scheduling + :func:`~repro.core.plan.build_plan`, memoised on the
+  replay-safe ``plan_signature`` plus every planning-relevant config knob.
+* :meth:`run_chain` hands that stream to one of the two interpreters in
+  :mod:`repro.core.interp`: the ledger interpreter (``simulate_only`` —
+  modelled timeline, no data) or the data-plane interpreter (real slot
+  arrays, transfer-engine staging, codecs, compiled tiles).  Both execute
+  the *same* ops, so simulated and real runs cannot drift apart.
+
 ``ResidentExecutor`` — the paper's baseline: everything resident in fast
 memory for the whole run (raises, like the paper's segfault, if it can't fit).
 
@@ -16,15 +28,6 @@ Data plane: home copies are NumPy (slow memory); slots are JAX device arrays;
 uploads/downloads go through ``jnp.asarray``/``np.asarray`` so the data path
 is real on every backend, while *timings* for the paper's platforms come from
 the calibrated :class:`~repro.core.memory.HardwareModel` ledger.
-
-The transfer layer itself lives in :mod:`repro.core.transfer`: a
-:class:`~repro.core.transfer.TransferEngine` (``transfer="threaded"`` stages
-uploads/downloads on background workers so tile *t+1*'s upload and tile
-*t−1*'s download genuinely overlap tile *t*'s compute; ``"sync"`` is the
-deterministic inline fallback), a
-:class:`~repro.core.transfer.ResidencyManager` (LRU slot pool, dirty-range
-tracking, pinned datasets, capacity accounting), and per-dataset compression
-codecs whose achieved wire bytes are what the ledger charges.
 """
 from __future__ import annotations
 
@@ -33,21 +36,16 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
-import jax.numpy as jnp
 import numpy as np
 
 from .dependency import ChainInfo, analyze_chain, chain_signature, plan_signature
 from .engine import TileEngine
+from .interp import DataPlaneInterpreter, LedgerInterpreter, SpecState
 from .loop import ParallelLoop
 from .memory import HardwareModel, TPU_V5E, TransferLedger
-from .tiling import (
-    Interval,
-    TileSchedule,
-    choose_num_tiles,
-    make_tile_schedule,
-)
+from .plan import Plan, build_plan
+from .tiling import TileSchedule, choose_num_tiles, make_tile_schedule
 from .transfer import ResidencyManager, TransferEngine, resolve_codecs
-from .transfer.engine import DOWN, UP
 
 
 @dataclass
@@ -60,7 +58,7 @@ class OOCConfig:
     cyclic: bool = False                     # §4.1 unsafe temporaries opt
     prefetch: bool = False                   # §4.1 speculative prefetch
     flops_per_point: Optional[int] = None    # compute model override
-    # Schedule/ledger only — no data plane.  For modelled benchmarks at
+    # Ledger interpreter only — no data plane.  For modelled benchmarks at
     # scaled-down sizes (correctness is covered by the executing tests).
     simulate_only: bool = False
     # -- transfer subsystem knobs --------------------------------------------
@@ -71,6 +69,12 @@ class OOCConfig:
     @property
     def capacity(self) -> float:
         return self.capacity_bytes if self.capacity_bytes is not None else self.hw.fast_capacity
+
+    def codec_key(self) -> Tuple:
+        """Hashable form of the codec spec (plan wire bytes depend on it)."""
+        if isinstance(self.codec, dict):
+            return tuple(sorted(self.codec.items()))
+        return (self.codec,)
 
 
 @dataclass
@@ -93,15 +97,21 @@ class ChainStats:
     compression_ratio: float = 1.0  # raw / wire over both directions
     queue_wait_s: float = 0.0      # submit-to-start latency summed over tasks
     transfer_mode: str = "sync"
+    # -- plan IR -------------------------------------------------------------
+    # Per-kind op counts straight from the chain's instruction stream
+    # (uploads/downloads/carries/elisions/evictions/...), so benchmarks
+    # report plan structure without re-deriving it from ledger events.
+    op_counts: Dict[str, int] = field(default_factory=dict)
 
 
 @dataclass
 class ChainPlan:
     """The memoised product of dependency analysis + tile scheduling + the
-    compiled tile engine for one chain signature.  Cyclic loop chains
-    (CloverLeaf/OpenSBLI timesteps) are structurally identical across steps,
-    so every flush after the first replays one of these instead of paying
-    ``analyze_chain`` + ``make_tile_schedule`` + jit-cache lookup again."""
+    compiled tile engine + the lowered instruction stream for one chain
+    signature.  Cyclic loop chains (CloverLeaf/OpenSBLI timesteps) are
+    structurally identical across steps, so every flush after the first
+    replays one of these instead of paying ``analyze_chain`` +
+    ``make_tile_schedule`` + ``build_plan`` + jit-cache lookup again."""
 
     key: Tuple
     info: ChainInfo
@@ -110,21 +120,9 @@ class ChainPlan:
     slot_bytes: int     # per-slot bytes, pinned datasets excluded
     sig: Tuple          # structural chain_signature (prefetch guessing)
     plan_s: float       # construction cost (what cache hits save)
+    ir: Plan = None                         # the typed instruction stream
     pinned_names: frozenset = frozenset()   # pinned datasets this chain touches
     pinned_bytes: int = 0                   # their whole-array residency cost
-
-
-class _SimArray:
-    """Placeholder device array for ``simulate_only`` pinned caching."""
-
-    __slots__ = ("nbytes",)
-
-    def __init__(self, nbytes: int):
-        self.nbytes = int(nbytes)
-
-
-def _region_to_slot(iv: Interval, origin: int) -> Tuple[int, int]:
-    return iv.lo - origin, iv.hi - origin
 
 
 class OutOfCoreExecutor:
@@ -150,56 +148,27 @@ class OutOfCoreExecutor:
         self.residency = ResidencyManager(
             capacity_bytes=self.cfg.capacity, num_slots=self.cfg.num_slots,
             pinned=frozenset(self.cfg.pinned))
-        # Speculative prefetch state: what we uploaded ahead for the next
-        # chain: {dat_name: (Interval, ...)} plus the signature we guessed
-        # from, and — on real data-plane runs — the captured device arrays
-        # backing those intervals ({name: [(Interval, array, dat_id,
-        # dat_version), ...]}).  A hit restores the captured data into the
-        # slot instead of re-staging from home; any identity/version mismatch
-        # degrades to a miss (full upload), never to stale data.
-        self._spec_uploaded: Dict[str, Tuple[Interval, ...]] = {}
-        self._spec_data: Dict[str, list] = {}
-        self._spec_sig = None
+        # Cross-chain speculative-prefetch state (shared by both interpreters).
+        self._spec = SpecState()
         self.history: List[ChainStats] = []
 
-    # -- helpers -------------------------------------------------------------
-    def _dat_np_region(self, dat, iv: Interval) -> np.ndarray:
-        td = self.cfg.tiled_dim
-        h = dat.halo[td][0]
-        idx = [slice(None)] * dat.ndim
-        idx[td] = slice(iv.lo + h, iv.hi + h)
-        return dat.data[tuple(idx)]
-
-    def _write_np_region(self, dat, iv: Interval, values: np.ndarray) -> None:
-        td = self.cfg.tiled_dim
-        h = dat.halo[td][0]
-        idx = [slice(None)] * dat.ndim
-        idx[td] = slice(iv.lo + h, iv.hi + h)
-        dat.data[tuple(idx)] = values
-
-    @staticmethod
-    def _slot_slice(arr, lo: int, hi: int, td: int):
-        idx = [slice(None)] * arr.ndim
-        idx[td] = slice(lo, hi)
-        return tuple(idx)
-
-    def _nbytes(self, dat, iv: Interval) -> int:
-        other = 1
-        for d, s in enumerate(dat.padded_shape):
-            if d != self.cfg.tiled_dim:
-                other *= s
-        return iv.length * other * dat.dtype.itemsize
-
     # -- planning ---------------------------------------------------------------
-    def plan_chain(self, loops: Sequence[ParallelLoop]) -> ChainPlan:
-        """Analysis + tile scheduling + engine, memoised on the replay-safe
-        ``plan_signature`` (structure, dataset identity, kernel fingerprints)
-        plus the planning-relevant config knobs.  Raises ``MemoryError``
-        (uncached) when no tile count fits, so ``run_chain`` can split."""
+    def plan_chain(self, loops: Sequence[ParallelLoop],
+                   keep_live: frozenset = frozenset()) -> ChainPlan:
+        """Analysis + tile scheduling + engine + the lowered Plan IR,
+        memoised on the replay-safe ``plan_signature`` (structure, dataset
+        identity, kernel fingerprints) plus the planning-relevant config
+        knobs.  ``keep_live`` names datasets a split chain's remainder still
+        reads (they may not be elided), and is part of the cache key because
+        the §4.1 elision decisions are baked into the instruction stream.
+        Raises ``MemoryError`` (uncached) when no tile count fits, so
+        ``run_chain`` can split."""
         cfg = self.cfg
         key = (plan_signature(loops, cfg.tiled_dim), cfg.num_tiles,
                cfg.num_slots, float(cfg.capacity),
-               tuple(sorted(cfg.pinned)))
+               tuple(sorted(cfg.pinned)), bool(cfg.cyclic),
+               bool(cfg.prefetch), cfg.codec_key(), cfg.flops_per_point,
+               tuple(sorted(keep_live)))
         plan = self._plans.get(key)
         if plan is not None:
             self._plans.move_to_end(key)
@@ -212,7 +181,7 @@ class OutOfCoreExecutor:
             info = analyze_chain(loops, tiled_dim=cfg.tiled_dim)
             pinned_names = self.residency.pinned & frozenset(info.datasets)
             n_tiles = cfg.num_tiles or choose_num_tiles(
-                info, int(cfg.capacity), num_slots=cfg.num_slots
+                info, cfg.capacity, num_slots=cfg.num_slots
             )
             sched = make_tile_schedule(info, n_tiles)
             slot_bytes = sched.slot_bytes(exclude=pinned_names)
@@ -225,6 +194,13 @@ class OutOfCoreExecutor:
                 self._no_fit.clear()
             self._no_fit.add(key)
             raise
+        ir = build_plan(
+            info, sched, num_slots=cfg.num_slots, cyclic=cfg.cyclic,
+            prefetch=cfg.prefetch, keep_live=frozenset(keep_live),
+            pinned_names=pinned_names, codec_spec=cfg.codec,
+            flops_per_point=cfg.flops_per_point, slot_bytes=slot_bytes,
+            pinned_bytes=pinned_bytes,
+        )
         # The engine (and its jit cache) is owned by the plan: sharing engines
         # across chains whose kernels differ only in captured constants would
         # replay stale closures — the fingerprint in ``key`` prevents exactly
@@ -232,7 +208,7 @@ class OutOfCoreExecutor:
         plan = ChainPlan(
             key=key, info=info, sched=sched, engine=TileEngine(info),
             slot_bytes=slot_bytes, sig=chain_signature(info),
-            plan_s=time.perf_counter() - t0,
+            plan_s=time.perf_counter() - t0, ir=ir,
             pinned_names=pinned_names, pinned_bytes=pinned_bytes,
         )
         self._plans[key] = plan
@@ -262,20 +238,26 @@ class OutOfCoreExecutor:
 
     # -- main entry ------------------------------------------------------------
     def run_chain(self, loops: Sequence[ParallelLoop],
-                  keep_live: frozenset = frozenset()) -> Dict[str, np.ndarray]:
-        """Run one chain; if no tile count makes its slots fit fast memory
-        (skew span exceeding the grid — long chains on small problems), split
-        the chain and run the halves sequentially.  This is the runtime
-        equivalent of OPS bounding the number of loops tiled across.
+                  keep_live: frozenset = frozenset(), *,
+                  plan: Optional[Plan] = None) -> Dict[str, np.ndarray]:
+        """Plan one chain and interpret its instruction stream; if no tile
+        count makes its slots fit fast memory (skew span exceeding the grid —
+        long chains on small problems), split the chain and run the halves
+        sequentially.  This is the runtime equivalent of OPS bounding the
+        number of loops tiled across.
+
+        ``plan`` replays an explicit (e.g. JSON-imported) instruction stream
+        instead of the freshly-planned one; its signature hash must match
+        the chain's.
 
         Splitting breaks the §4.1 Cyclic contract: a write-first dat of the
         first half is no longer a dead temporary if the second half reads it,
         so its download cannot be elided — ``keep_live`` carries the dats the
         remainder of the original chain still consumes."""
         try:
-            return self._run_chain_tiled(loops, keep_live)
+            return self._interpret_chain(loops, keep_live, plan)
         except MemoryError:
-            if len(loops) <= 1:
+            if len(loops) <= 1 or plan is not None:
                 raise
             mid = len(loops) // 2
             head, tail = loops[:mid], loops[mid:]
@@ -290,568 +272,69 @@ class OutOfCoreExecutor:
                              if name in out else val)
             return out
 
-    def _run_chain_tiled(self, loops: Sequence[ParallelLoop],
-                         keep_live: frozenset = frozenset()) -> Dict[str, np.ndarray]:
+    def _interpret_chain(self, loops: Sequence[ParallelLoop],
+                         keep_live: frozenset,
+                         ir: Optional[Plan] = None) -> Dict[str, np.ndarray]:
         cfg = self.cfg
-        td = cfg.tiled_dim
         t_wall = time.perf_counter()
         n_cached = self.plan_hits
-        plan = self.plan_chain(loops)
+        cp = self.plan_chain(loops, keep_live)
         cache_hit = self.plan_hits > n_cached
-        # On a cache hit the recorded loops are interchangeable with the
-        # plan's (equal structure, dataset objects, kernel fingerprints);
-        # executing the plan's loops keeps the engine's jit cache valid.
-        info, sched, engine = plan.info, plan.sched, plan.engine
-        slot_bytes = plan.slot_bytes
-        sig = plan.sig
-        sim = cfg.simulate_only
+        if ir is None:
+            ir = cp.ir
+        elif ir.sig_hash != cp.ir.sig_hash:
+            raise ValueError(
+                "imported plan does not match this chain (signature hash "
+                f"{ir.sig_hash[:12]} != {cp.ir.sig_hash[:12]})")
+        elif (ir.num_tiles, ir.num_slots, ir.tiled_dim) != (
+                cp.ir.num_tiles, cp.ir.num_slots, cp.ir.tiled_dim):
+            # Same chain, different geometry: the imported op stream would be
+            # bound to this config's tile schedule and fail far away inside
+            # the transfer engine — reject it here with the real reason.
+            raise ValueError(
+                "imported plan does not match this config's tile geometry "
+                f"(plan {ir.num_tiles} tiles x {ir.num_slots} slots, dim "
+                f"{ir.tiled_dim}; config {cp.ir.num_tiles} x "
+                f"{cp.ir.num_slots}, dim {cp.ir.tiled_dim})")
         tx = self.transfer
-        rm = self.residency
-        pinned_names = plan.pinned_names
-        codecs = resolve_codecs(cfg.codec, tuple(info.datasets))
         tx_before = tx.snapshot()
-
-        def nominal_wire(name: str, nbytes: int) -> int:
-            """Modelled post-codec bytes for simulate_only (no data to encode)."""
-            if not nbytes:
-                return 0
-            ratio = codecs[name].nominal_ratio(info.datasets[name].dtype)
-            return max(1, int(nbytes / ratio))
-
-        ledger = TransferLedger(cfg.hw)
-        # Transfer events are recorded with raw sizes up front (dependency
-        # wiring needs the event ids in submission order) and patched with the
-        # achieved post-codec wire bytes after the engine drains.
-        patches: List[Tuple[int, object, str]] = []
-
-        # ---- pinned datasets: whole-array device residency, cached across
-        # chains while the home copy's version is unchanged --------------------
-        pinned_arrays: Dict[str, object] = {}
-        pinned_origins: Dict[str, int] = {}
-        pinned_written: Set[str] = set()
-        pin_up_raw = pin_up_wire = 0
-        last_upload_eid: Optional[int] = None
-        for name in sorted(pinned_names):
-            dat = info.datasets[name]
-            origin = -dat.halo[td][0]
-            hit = rm.pinned_lookup(dat)
-            if hit is not None:
-                arr, origin = hit
-            elif sim:
-                arr = _SimArray(dat.nbytes)
-                rm.pinned_store(dat, arr, origin)
-                pin_up_raw += dat.nbytes
-                pin_up_wire += nominal_wire(name, dat.nbytes)
-            else:
-                dec, raw, wire = codecs[name].roundtrip(dat.data)
-                arr = jnp.asarray(np.asarray(dec, dtype=dat.dtype))
-                rm.pinned_store(dat, arr, origin)
-                pin_up_raw += raw
-                pin_up_wire += wire
-            pinned_arrays[name] = arr
-            pinned_origins[name] = origin
-        if pin_up_wire:
-            last_upload_eid = ledger.add(
-                1, "upload", pin_up_wire, ledger.t_up(pin_up_wire), ())
-
-        # ---- slot pool: LRU-tracked by the residency manager -----------------
-        slots = rm.begin_chain(cfg.num_slots)
-        if not sim:
-            for slot in slots:
-                arrays = {}
-                for name, ln in sched.max_fp_len.items():
-                    if name in pinned_names:
-                        continue
-                    dat = info.datasets[name]
-                    shape = list(dat.padded_shape)
-                    shape[td] = ln
-                    arrays[name] = jnp.zeros(tuple(shape), dtype=dat.dtype)
-                slot.arrays = arrays
-
-        reductions: Dict[str, np.ndarray] = {}
-        red_specs = {}
-        for lp in info.loops:
-            for r in lp.reductions:
-                red_specs[r.name] = r
-
-        uploaded = pin_up_raw
-        uploaded_wire = pin_up_wire
-        downloaded = downloaded_wire = edge_bytes = 0
-        prefetch_hits = 0
-        num_tiles = sched.num_tiles
-        # event ids for stream dependency wiring
-        last_compute_eid: Optional[int] = None
-        last_download_eid: Dict[int, Optional[int]] = {}  # slot index -> eid
-        compute_eids: List[Optional[int]] = [None] * num_tiles
-        tile_up_eid: List[Optional[int]] = [None] * num_tiles
-        tile_slot: List = [None] * num_tiles
-        tile_org: List = [None] * num_tiles
-        up_handles: List = [None] * num_tiles
-
-        spec_valid = (
-            cfg.prefetch
-            and self._spec_sig is not None
-            and self._spec_sig == sig
-            and bool(self._spec_uploaded)
-        )
-        # Pipelined submission (tile t+1's upload issued during tile t) needs
-        # a second slot to stage into; a 1-slot pool runs strictly in order.
-        early_submit = cfg.num_slots >= 2
-
-        def spec_lookup(name, iv):
-            """Resolve a speculative-prefetch hit for upload piece ``iv``.
-
-            Returns ``(miss_part, restore)``: the sub-interval still needing a
-            home upload, and — on real data-plane runs — the captured device
-            array to copy into the slot for the hit part.  A capture whose
-            dataset identity/version no longer matches home degrades to a
-            full miss."""
-            nonlocal prefetch_hits
-            pre = self._spec_uploaded.get(name, ())
-            for j, piv in enumerate(pre):
-                hit = iv.intersect(piv)
-                if hit.empty or hit.lo != iv.lo:
-                    continue
-                if sim:
-                    prefetch_hits += 1
-                    return Interval(hit.hi, iv.hi), None
-                ents = self._spec_data.get(name, ())
-                ent = ents[j] if j < len(ents) else None
-                dat = info.datasets[name]
-                if (ent is not None and ent[0] == piv and ent[2] == id(dat)
-                        and ent[3] == dat.version):
-                    prefetch_hits += 1
-                    return Interval(hit.hi, iv.hi), (name, hit, ent[1], piv.lo)
-                return iv, None  # stale capture: stage everything from home
-            return iv, None
-
-        def upload_plan(t):
-            """Pieces tile t stages up (cold-clamped, prefetch-adjusted)."""
-            tile = sched.tiles[t]
-            org = {name: iv.lo for name, iv in tile.footprint.items()
-                   if not iv.empty}
-            items: List[Tuple[str, Interval]] = []
-            restores: List[Tuple] = []
-            raw = 0
-            conflicts: List = []
-            for name, pieces in tile.upload.items():
-                if name in pinned_names:
-                    continue    # whole-array resident: never staged per tile
-                if name in info.write_first:
-                    # §4.1: write-first data never uploads — except rows the
-                    # chain reads before any write reaches them (halo skirts):
-                    # those are genuinely consumed from home (cold reads).
-                    cold = info.cold.get(name, [])
-                    pieces = tuple(
-                        p
-                        for iv in pieces
-                        for p in (iv.clamp(clo, chi) for clo, chi in cold)
-                        if not p.empty
-                    )
-                for iv in pieces:
-                    if iv.empty:
-                        continue
-                    use = iv
-                    if spec_valid and t == 0:
-                        use, restore = spec_lookup(name, iv)
-                        if restore is not None:
-                            restores.append(restore)
-                    if use.empty:
-                        continue
-                    raw += self._nbytes(info.datasets[name], use)
-                    items.append((name, use))
-                    # Home rows a still-pending download is writing back must
-                    # land before this staging read (cross-tile safety net;
-                    # the footprint algebra keeps these disjoint in practice).
-                    conflicts.extend(rm.home_conflicts(name, use.lo, use.hi))
-            return org, items, restores, raw, conflicts
-
-        def make_upload_task(slot, org, items, restores=()):
-            def task():
-                raw = wire = 0
-                # Prefetch restores: device-resident captures from the last
-                # chain's speculative upload — no link traffic (it was
-                # charged as the prefetch event back then).
-                for name, hit, arr, arr_lo in restores:
-                    vals = arr[self._slot_slice(
-                        arr, hit.lo - arr_lo, hit.hi - arr_lo, td)]
-                    lo, hi = _region_to_slot(hit, org[name])
-                    with slot.lock:
-                        dst = slot.arrays[name]
-                        slot.arrays[name] = dst.at[
-                            self._slot_slice(dst, lo, hi, td)
-                        ].set(vals)
-                for name, use in items:
-                    dat = info.datasets[name]
-                    chunk = self._dat_np_region(dat, use)
-                    dec, r, w = codecs[name].roundtrip(chunk)
-                    raw += r
-                    wire += w
-                    vals = jnp.asarray(np.asarray(dec, dtype=dat.dtype))
-                    lo, hi = _region_to_slot(use, org[name])
-                    # Disjoint-region updates commute, but the functional
-                    # read-modify-write of the slot's dict entry must be
-                    # atomic against the main thread's edge copy.
-                    with slot.lock:
-                        arr = slot.arrays[name]
-                        slot.arrays[name] = arr.at[
-                            self._slot_slice(arr, lo, hi, td)
-                        ].set(vals)
-                return raw, wire
-            return task
-
-        def submit_upload(t):
-            """Acquire tile t's slot and queue its staging task.
-
-            Per-tile transfers COALESCE into one task/ledger event per
-            direction (one staging pass per tile — at real scale per-dat
-            latencies are noise; at scaled-down bench sizes they would
-            dominate falsely)."""
-            nonlocal last_upload_eid, uploaded, uploaded_wire
-            slot = rm.acquire()
-            org, items, restores, raw, conflicts = upload_plan(t)
-            slot.origins = org
-            tile_slot[t] = slot
-            tile_org[t] = org
-            if not raw and not restores:
-                return
-            up_deps = []
-            if last_download_eid.get(slot.index) is not None:
-                up_deps.append(last_download_eid[slot.index])  # slot reuse fence
-            if last_upload_eid is not None:
-                up_deps.append(last_upload_eid)                # stream-1 FIFO
-            if sim:
-                uploaded += raw
-                wire = sum(
-                    nominal_wire(name, self._nbytes(info.datasets[name], use))
-                    for name, use in items)
-                uploaded_wire += wire
-                eid = ledger.add(1, "upload", wire, ledger.t_up(wire),
-                                 tuple(up_deps))
-            else:
-                handle = tx.submit(UP,
-                                   make_upload_task(slot, org, items, restores),
-                                   deps=conflicts)
-                up_handles[t] = handle
-                for name, use in items:
-                    rm.note_home_read(name, use.lo, use.hi, handle)
-                if not raw:
-                    # Pure prefetch restore: device-side only, no link event
-                    # (the traffic was charged as last chain's prefetch).
-                    return
-                uploaded += raw
-                eid = ledger.add(1, "upload", raw, ledger.t_up(raw),
-                                 tuple(up_deps))
-                patches.append((eid, handle, UP))
-            tile_up_eid[t] = eid
-            last_upload_eid = eid
-
-        def make_download_task(arrays, org, items):
-            def task():
-                raw = wire = 0
-                for name, iv in items:
-                    dat = info.datasets[name]
-                    lo, hi = _region_to_slot(iv, org[name])
-                    arr = arrays[name]
-                    vals = np.asarray(arr[self._slot_slice(arr, lo, hi, td)])
-                    dec, r, w = codecs[name].roundtrip(vals)
-                    raw += r
-                    wire += w
-                    self._write_np_region(dat, iv, np.asarray(dec, dat.dtype))
-                return raw, wire
-            return task
-
-        submit_upload(0)
-        for t, tile in enumerate(sched.tiles):
-            slot = tile_slot[t]
-            org = tile_org[t]
-
-            # ---- preparation phase: tile t's staging must have landed -------
-            if up_handles[t] is not None:
-                up_handles[t].wait()
-            # Algorithm 1: issue tile t+1's upload now, so in threaded mode it
-            # genuinely overlaps this tile's compute (the ledger wires the
-            # same overlap into the modelled timeline either way).
-            if t + 1 < num_tiles and early_submit:
-                submit_upload(t + 1)
-
-            # ---- execution phase -------------------------------------------
-            comp_deps = []
-            if tile_up_eid[t] is not None:
-                comp_deps.append(tile_up_eid[t])
-            if last_compute_eid is not None:
-                comp_deps.append(last_compute_eid)
-            tile_bytes = 0
-            tile_flops = 0
-            for k, box in enumerate(tile.loop_ranges):
-                if box is None:
-                    continue
-                npts = 1
-                for a, b in box:
-                    npts *= b - a
-                lp = info.loops[k]
-                full_pts = 1
-                for a, b in lp.range_:
-                    full_pts *= b - a
-                frac = npts / full_pts
-                tile_bytes += int(lp.bytes_moved() * frac)
-                tile_flops += int(lp.flops(cfg.flops_per_point) * frac)
-            if not sim:
-                run_arrays = {**slot.arrays, **pinned_arrays}
-                run_origins = {**org, **pinned_origins}
-                new_arrays, tile_reds = engine.run_tile(tile, run_arrays, run_origins)
-                for name in pinned_arrays:
-                    pinned_arrays[name] = new_arrays[name]
-                    rm.pinned_update(info.datasets[name], new_arrays[name])
-                slot.arrays = {n: a for n, a in new_arrays.items()
-                               if n not in pinned_arrays}
-                for name, val in tile_reds.items():
-                    spec = red_specs[name]
-                    if name in reductions:
-                        reductions[name] = np.asarray(
-                            spec.combine(reductions[name], val))
-                    else:
-                        reductions[name] = np.asarray(val)
-            last_compute_eid = ledger.add(
-                0, "compute", tile_bytes, ledger.t_compute(tile_bytes, tile_flops),
-                tuple(comp_deps),
-            )
-            compute_eids[t] = last_compute_eid
-            # Residency bookkeeping: rows this tile wrote stay dirty until a
-            # download, an edge carry, or a §4.1 elision retires them — the
-            # manager refuses slot reuse (and chain end) while any survive.
-            for k, box in enumerate(tile.loop_ranges):
-                if box is None:
-                    continue
-                lo_w, hi_w = box[td]
-                for arg in info.loops[k].args:
-                    if not arg.mode.writes:
-                        continue
-                    if arg.dat.name in pinned_names:
-                        pinned_written.add(arg.dat.name)
-                    else:
-                        rm.mark_dirty(slot, arg.dat.name, lo_w, hi_w)
-
-            # ---- finishing phase --------------------------------------------
-            def do_edge():
-                """Edge copy: right edge of tile t -> slot of tile t+1."""
-                nonlocal edge_bytes, last_compute_eid
-                if t + 1 >= num_tiles:
-                    return
-                next_slot = tile_slot[t + 1]
-                if next_slot is None:
-                    # 1-slot pool (late submit): tile t+1 continues in this
-                    # very slot — rebase from this tile's origins to the next
-                    # tile's BEFORE its upload lands in the rebased positions.
-                    next_slot = slot
-                    next_org = {
-                        name: iv.lo
-                        for name, iv in sched.tiles[t + 1].footprint.items()
-                        if not iv.empty
-                    }
-                else:
-                    next_org = tile_org[t + 1]
-                edge_deps = [last_compute_eid]
-                if last_download_eid.get(next_slot.index) is not None:
-                    edge_deps.append(last_download_eid[next_slot.index])
-                tile_edge_bytes = 0
-                for name, iv in tile.edge_to_next.items():
-                    if iv.empty or name not in next_org or name in pinned_names:
-                        continue
-                    if not sim:
-                        src_lo, src_hi = _region_to_slot(iv, org[name])
-                        dst_lo, dst_hi = _region_to_slot(iv, next_org[name])
-                        src = slot.arrays[name]
-                        vals = src[self._slot_slice(src, src_lo, src_hi, td)]
-                        with next_slot.lock:
-                            dst = next_slot.arrays[name]
-                            next_slot.arrays[name] = dst.at[
-                                self._slot_slice(dst, dst_lo, dst_hi, td)
-                            ].set(vals)
-                    rm.carry(slot, next_slot, name, iv.lo, iv.hi)
-                    tile_edge_bytes += self._nbytes(info.datasets[name], iv)
-                if tile_edge_bytes:
-                    edge_bytes += tile_edge_bytes
-                    last_compute_eid = ledger.add(
-                        0, "edge", tile_edge_bytes,
-                        ledger.t_dd(2 * tile_edge_bytes), tuple(edge_deps))
-
-            def do_downloads():
-                """Download the left footprint of modified datasets."""
-                nonlocal downloaded, downloaded_wire
-                dn_deps = [compute_eids[t]]
-                items: List[Tuple[str, Interval]] = []
-                raw = 0
-                for name, pieces in tile.download.items():
-                    if name in pinned_names or name in info.read_only:
-                        continue  # never written / flushed once at chain end
-                    if (cfg.cyclic and name in info.write_first
-                            and name not in keep_live):
-                        # §4.1 Cyclic: temporaries stay on device — no
-                        # traffic, but the residency books must balance.
-                        for iv in pieces:
-                            if not iv.empty:
-                                rm.elide(slot, name, iv.lo, iv.hi)
-                        continue
-                    for iv in pieces:
-                        if iv.empty:
-                            continue
-                        raw += self._nbytes(info.datasets[name], iv)
-                        items.append((name, iv))
-                if not raw:
-                    return
-                downloaded += raw
-                if sim:
-                    wire = sum(
-                        nominal_wire(name, self._nbytes(info.datasets[name], iv))
-                        for name, iv in items)
-                    downloaded_wire += wire
-                    eid = ledger.add(2, "download", wire, ledger.t_down(wire),
-                                     tuple(dn_deps))
-                    for name, iv in items:
-                        rm.writeback(slot, name, iv.lo, iv.hi)
-                else:
-                    # Snapshot the arrays: a later tile's upload functionally
-                    # replaces dict entries, never the captured values.  The
-                    # home write must also wait for earlier-queued uploads
-                    # still reading overlapping home rows (tile t+1's upload
-                    # is submitted before tile t's download).
-                    read_deps = [
-                        h for name, iv in items
-                        for h in rm.home_read_conflicts(name, iv.lo, iv.hi)]
-                    handle = tx.submit(
-                        DOWN, make_download_task(dict(slot.arrays), org, items),
-                        deps=read_deps)
-                    eid = ledger.add(2, "download", raw, ledger.t_down(raw),
-                                     tuple(dn_deps))
-                    patches.append((eid, handle, DOWN))
-                    for name, iv in items:
-                        rm.writeback(slot, name, iv.lo, iv.hi, handle)
-                last_download_eid[slot.index] = eid
-
-            if early_submit:
-                do_edge()
-                do_downloads()
-            else:
-                # 1-slot pool: retire this tile before staging the next one
-                # into the same (continuing) slot.
-                do_downloads()
-                do_edge()
-                if t + 1 < num_tiles:
-                    submit_upload(t + 1)
-
-            # Speculative prefetch (§4.1): during the last tile, upload the
-            # next chain's assumed first tile (assume it mirrors this chain).
-            if cfg.prefetch and t == num_tiles - 1:
-                first = sched.tiles[0]
-                nb_total = 0
-                self._spec_uploaded = {}
-                for name, pieces in first.upload.items():
-                    if name in info.write_first or name in pinned_names:
-                        continue
-                    live = tuple(iv for iv in pieces if not iv.empty)
-                    if not live:
-                        continue
-                    self._spec_uploaded[name] = live
-                    # Charge at nominal post-codec size so prefetch traffic
-                    # is priced consistently with the uploads it replaces.
-                    nb_total += sum(
-                        nominal_wire(name, self._nbytes(info.datasets[name], iv))
-                        for iv in live)
-                if nb_total:
-                    # Overlaps the last compute on stream 1.
-                    ledger.add(1, "prefetch", nb_total, ledger.t_up(nb_total),
-                               (last_upload_eid,) if last_upload_eid is not None else ())
-                self._spec_sig = sig
-
-        tx.drain()
-        # Patch transfer events with the achieved wire bytes (codec output is
-        # data-dependent, so threaded tasks only report it after the fact).
-        # ``ledger.totals`` accumulated the raw estimate at submission and
-        # must shift by the same delta to stay consistent with the events.
-        for eid, handle, direction in patches:
-            _, wire = handle.result
-            ev = ledger.events[eid]
-            ledger.totals[ev.kind] = ledger.totals.get(ev.kind, 0) + wire - ev.nbytes
-            ev.nbytes = wire
-            ev.duration = (ledger.t_up(wire) if direction == UP
-                           else ledger.t_down(wire))
-            if direction == UP:
-                uploaded_wire += wire
-            else:
-                downloaded_wire += wire
-
-        # Speculative-prefetch data capture (real data plane): home is stable
-        # now that downloads have drained, so snapshot the regions the next
-        # chain's first tile is assumed to upload.  ``jnp.array`` copies —
-        # the capture must not alias home rows a later chain will overwrite.
-        if cfg.prefetch and not sim:
-            self._spec_data = {}
-            for name, ivs in self._spec_uploaded.items():
-                dat = info.datasets.get(name)
-                if dat is None:
-                    continue
-                self._spec_data[name] = [
-                    (iv, jnp.array(self._dat_np_region(dat, iv)), id(dat),
-                     dat.version)
-                    for iv in ivs]
-
-        # Pinned flush: written pinned datasets ship home once per chain.
-        pin_dn_raw = pin_dn_wire = 0
-        for name in sorted(pinned_written):
-            dat = info.datasets[name]
-            rows = info.written.get(name, [])
-            if sim:
-                nb = sum(self._nbytes(dat, Interval(lo, hi)) for lo, hi in rows)
-                pin_dn_raw += nb
-                pin_dn_wire += nominal_wire(name, nb)
-            else:
-                arr = pinned_arrays[name]
-                origin = pinned_origins[name]
-                for lo, hi in rows:
-                    vals = np.asarray(arr[self._slot_slice(
-                        arr, lo - origin, hi - origin, td)])
-                    dec, r, w = codecs[name].roundtrip(vals)
-                    pin_dn_raw += r
-                    pin_dn_wire += w
-                    self._write_np_region(dat, Interval(lo, hi),
-                                          np.asarray(dec, dat.dtype))
-            rm.pinned_mark_flushed(dat)
-        if pin_dn_wire:
-            downloaded += pin_dn_raw
-            downloaded_wire += pin_dn_wire
-            ledger.add(2, "download", pin_dn_wire, ledger.t_down(pin_dn_wire),
-                       (last_compute_eid,) if last_compute_eid is not None else ())
-        rm.end_chain()
-
-        makespan = ledger.simulate()
-        wall = time.perf_counter() - t_wall
-        loop_bytes = info.loop_bytes()
+        if cfg.simulate_only:
+            interp = LedgerInterpreter(
+                ir, cfg.hw, rm=self.residency, spec=self._spec,
+                datasets=cp.info.datasets)
+        else:
+            interp = DataPlaneInterpreter(
+                ir, cfg.hw, rm=self.residency, spec=self._spec, cp=cp, tx=tx,
+                codecs=resolve_codecs(cfg.codec, tuple(cp.info.datasets)))
+        res = interp.run()
         tx_delta = tx.delta(tx.snapshot(), tx_before)
-        raw_total = uploaded + downloaded
-        wire_total = uploaded_wire + downloaded_wire
+        raw_total = res.uploaded + res.downloaded
+        wire_total = res.uploaded_wire + res.downloaded_wire
         self.history.append(
             ChainStats(
-                num_tiles=sched.num_tiles,
-                loop_bytes=loop_bytes,
-                uploaded=uploaded,
-                downloaded=downloaded,
-                edge_bytes=edge_bytes,
-                prefetch_hits=prefetch_hits,
-                wall_s=wall,
-                modelled_s=makespan,
-                achieved_bw_model=loop_bytes / makespan if makespan else 0.0,
-                slot_bytes=slot_bytes,
+                num_tiles=ir.num_tiles,
+                loop_bytes=ir.loop_bytes,
+                uploaded=res.uploaded,
+                downloaded=res.downloaded,
+                edge_bytes=res.edge_bytes,
+                prefetch_hits=res.prefetch_hits,
+                wall_s=time.perf_counter() - t_wall,
+                modelled_s=res.makespan,
+                achieved_bw_model=(ir.loop_bytes / res.makespan
+                                   if res.makespan else 0.0),
+                slot_bytes=cp.slot_bytes,
                 plan_cache_hit=cache_hit,
-                plan_s=0.0 if cache_hit else plan.plan_s,
-                uploaded_wire=uploaded_wire,
-                downloaded_wire=downloaded_wire,
-                compression_ratio=raw_total / wire_total if wire_total else 1.0,
+                plan_s=0.0 if cache_hit else cp.plan_s,
+                uploaded_wire=res.uploaded_wire,
+                downloaded_wire=res.downloaded_wire,
+                compression_ratio=(raw_total / wire_total
+                                   if wire_total else 1.0),
                 queue_wait_s=tx_delta.get("queue_wait_s", 0.0),
                 transfer_mode=tx.mode,
+                op_counts=ir.counts(),
             )
         )
-        return reductions
+        return res.reductions
 
     # -- aggregate metrics -----------------------------------------------------
     def average_bandwidth_model(self) -> float:

@@ -1,0 +1,667 @@
+"""Plan interpreters: one op stream, two execution modes.
+
+:class:`LedgerInterpreter` walks a :class:`~repro.core.plan.Plan` and
+produces the modelled timeline — ledger events with the exact three-stream
+dependency wiring Algorithm 1 implies (upload FIFO, per-slot reuse fences,
+compute chaining, download-after-compute), plus residency bookkeeping so the
+dirty-row invariants are enforced even in pure simulation.  This is the
+``sim`` backend's whole execution path, and what :meth:`Session.explain`
+and the autotuner cost plans with.
+
+:class:`DataPlaneInterpreter` subclasses it and additionally moves real
+bytes: slot arrays, staging tasks on the
+:class:`~repro.core.transfer.TransferEngine` (coalesced per tile/direction),
+codec round-trips with achieved wire bytes patched into the ledger after
+drain, edge copies, pinned-array residency, speculative-prefetch capture and
+restore, and the compiled :class:`~repro.core.engine.TileEngine` tiles.
+
+Both interpreters execute the *same* instruction stream — the executor's
+old inline ``sim``/real branches are now one code path with data hooks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .memory import HardwareModel, TransferLedger
+from .plan import (
+    CarryEdge,
+    Compute,
+    Download,
+    Elide,
+    Evict,
+    PinUpload,
+    Plan,
+    Prefetch,
+    Upload,
+    WritebackPinned,
+)
+from .tiling import Interval
+from .transfer import ResidencyManager
+from .transfer.engine import DOWN, UP
+
+
+class _SimArray:
+    """Placeholder device array for simulated pinned caching."""
+
+    __slots__ = ("nbytes",)
+
+    def __init__(self, nbytes: int):
+        self.nbytes = int(nbytes)
+
+
+@dataclass
+class SpecState:
+    """Cross-chain speculative-prefetch state (owned by the executor).
+
+    ``uploaded``: what the last chain prefetched ({name: (Interval, ...)});
+    ``data``: on real data-plane runs, the captured device arrays backing
+    those intervals; ``sig``: the plan signature hash the guess came from.
+    A hit restores captured data instead of re-staging from home; any
+    identity/version mismatch degrades to a miss, never to stale data."""
+
+    uploaded: Dict[str, Tuple[Interval, ...]] = field(default_factory=dict)
+    data: Dict[str, list] = field(default_factory=dict)
+    sig: Optional[str] = None
+
+
+@dataclass
+class InterpResult:
+    """What one interpreted chain produced (metrics + reductions)."""
+
+    reductions: Dict[str, np.ndarray]
+    makespan: float
+    uploaded: int
+    downloaded: int
+    uploaded_wire: int
+    downloaded_wire: int
+    edge_bytes: int
+    prefetch_hits: int
+    ledger: TransferLedger
+
+
+class LedgerInterpreter:
+    """Cost a plan: ledger events + residency bookkeeping, no data plane.
+
+    ``rm``/``spec`` default to throwaway instances (offline plan analysis);
+    the executor passes its own so pinned caching and prefetch guessing work
+    across chains exactly as on the data plane.  ``datasets`` (optional)
+    enables pinned cache lookups keyed by dataset identity/version."""
+
+    def __init__(self, plan: Plan, hw: HardwareModel,
+                 rm: Optional[ResidencyManager] = None,
+                 spec: Optional[SpecState] = None,
+                 datasets: Optional[Dict[str, Any]] = None):
+        self.plan = plan
+        self.hw = hw
+        self.rm = rm if rm is not None else ResidencyManager(
+            capacity_bytes=float("inf"), num_slots=plan.num_slots)
+        self.spec = spec if spec is not None else SpecState()
+        self.datasets = datasets or {}
+        self.ledger = TransferLedger(hw)
+        self.row_bytes = dict(plan.row_bytes)
+        self.ratios = dict(plan.codec_ratios)
+        self.origins: List[Dict[str, int]] = [dict(o) for o in plan.tile_origins]
+        # metrics
+        self.uploaded = self.downloaded = 0
+        self.uploaded_wire = self.downloaded_wire = 0
+        self.edge_bytes = 0
+        self.prefetch_hits = 0
+        self.reductions: Dict[str, np.ndarray] = {}
+        # event-id cursors (the three-stream dependency wiring)
+        self.last_upload_eid: Optional[int] = None
+        self.last_compute_eid: Optional[int] = None
+        self.last_download_eid: Dict[int, Optional[int]] = {}
+        self.tile_up_eid: Dict[int, int] = {}
+        self.compute_eids: Dict[int, int] = {}
+        self.tile_slot: Dict[int, Any] = {}
+
+    # -- byte math over plan annotations --------------------------------------
+    def _nbytes(self, name: str, lo: int, hi: int) -> int:
+        return max(0, hi - lo) * self.row_bytes[name]
+
+    def _wire(self, name: str, nb: int) -> int:
+        return max(1, int(nb / self.ratios[name])) if nb else 0
+
+    # -- driver ---------------------------------------------------------------
+    _DISPATCH = {
+        PinUpload.kind: "op_pin_upload",
+        Upload.kind: "op_upload",
+        Compute.kind: "op_compute",
+        CarryEdge.kind: "op_carry",
+        Elide.kind: "op_elide",
+        Download.kind: "op_download",
+        Evict.kind: "op_evict",
+        Prefetch.kind: "op_prefetch",
+        WritebackPinned.kind: "op_pin_flush",
+    }
+
+    def run(self) -> InterpResult:
+        plan = self.plan
+        self.spec_valid = (
+            plan.prefetch
+            and self.spec.sig is not None
+            and self.spec.sig == plan.sig_hash
+            and bool(self.spec.uploaded)
+        )
+        self.slots = self.rm.begin_chain(plan.num_slots)
+        self.begin()
+        for op in plan.ops:
+            getattr(self, self._DISPATCH[op.kind])(op)
+        self.finish()
+        self.rm.end_chain()
+        return InterpResult(
+            reductions=self.reductions,
+            makespan=self.ledger.simulate(),
+            uploaded=self.uploaded, downloaded=self.downloaded,
+            uploaded_wire=self.uploaded_wire,
+            downloaded_wire=self.downloaded_wire,
+            edge_bytes=self.edge_bytes, prefetch_hits=self.prefetch_hits,
+            ledger=self.ledger,
+        )
+
+    # -- lifecycle hooks (data plane overrides) -------------------------------
+    def begin(self) -> None:
+        pass
+
+    def finish(self) -> None:
+        pass
+
+    # -- pinned residency -----------------------------------------------------
+    def op_pin_upload(self, op: PinUpload) -> None:
+        raw = wire = 0
+        for name, nb in op.entries:
+            r, w = self.pin_ensure(name, nb)
+            raw += r
+            wire += w
+        self.uploaded += raw
+        self.uploaded_wire += wire
+        if wire:
+            self.last_upload_eid = self.ledger.add(
+                1, "upload", wire, self.ledger.t_up(wire), ())
+
+    def pin_ensure(self, name: str, nb: int) -> Tuple[int, int]:
+        """Make ``name`` device-resident; returns (raw, wire) actually moved
+        (0, 0 on a cross-chain pinned-cache hit)."""
+        dat = self.datasets.get(name)
+        if dat is None:   # offline analysis: assume cold
+            return nb, self._wire(name, nb)
+        hit = self.rm.pinned_lookup(dat)
+        if hit is not None:
+            return 0, 0
+        origin = -dat.halo[self.plan.tiled_dim][0]
+        self.rm.pinned_store(dat, _SimArray(dat.nbytes), origin)
+        return nb, self._wire(name, nb)
+
+    # -- staging --------------------------------------------------------------
+    def spec_lookup(self, name: str, iv: Interval):
+        """Resolve a speculative-prefetch hit for upload piece ``iv``:
+        returns ``(miss_part, restore)`` — the sub-interval still needing a
+        home upload, and the restore token (always None without a data
+        plane: a modelled hit simply skips the traffic)."""
+        for piv in self.spec.uploaded.get(name, ()):
+            hit = iv.intersect(piv)
+            if hit.empty or hit.lo != iv.lo:
+                continue
+            self.prefetch_hits += 1
+            return Interval(hit.hi, iv.hi), None
+        return iv, None
+
+    def op_upload(self, op: Upload) -> None:
+        slot = self.rm.acquire()
+        org = self.origins[op.tile]
+        slot.origins = org
+        self.tile_slot[op.tile] = slot
+        items: List[Tuple[str, Interval]] = []
+        restores: List[Tuple] = []
+        raw = 0
+        for name, lo, hi in op.items:
+            iv = Interval(lo, hi)
+            if self.spec_valid and op.tile == 0:
+                iv, restore = self.spec_lookup(name, iv)
+                if restore is not None:
+                    restores.append(restore)
+            if iv.empty:
+                continue
+            raw += self._nbytes(name, iv.lo, iv.hi)
+            items.append((name, iv))
+        if not raw and not restores:
+            return
+        up_deps: List[int] = []
+        if self.last_download_eid.get(slot.index) is not None:
+            up_deps.append(self.last_download_eid[slot.index])  # reuse fence
+        if self.last_upload_eid is not None:
+            up_deps.append(self.last_upload_eid)                # stream-1 FIFO
+        eid = self.stage_upload(op, slot, org, items, restores, raw,
+                                tuple(up_deps))
+        if eid is not None:
+            self.tile_up_eid[op.tile] = eid
+            self.last_upload_eid = eid
+
+    def stage_upload(self, op, slot, org, items, restores, raw, deps):
+        self.uploaded += raw
+        wire = sum(self._wire(name, self._nbytes(name, iv.lo, iv.hi))
+                   for name, iv in items)
+        self.uploaded_wire += wire
+        return self.ledger.add(1, "upload", wire, self.ledger.t_up(wire), deps)
+
+    # -- compute --------------------------------------------------------------
+    def op_compute(self, op: Compute) -> None:
+        slot = self.tile_slot[op.tile]
+        deps: List[int] = []
+        if self.tile_up_eid.get(op.tile) is not None:
+            deps.append(self.tile_up_eid[op.tile])
+        if self.last_compute_eid is not None:
+            deps.append(self.last_compute_eid)
+        self.execute_tile(op, slot)
+        eid = self.ledger.add(
+            0, "compute", op.nbytes,
+            self.ledger.t_compute(op.nbytes, op.flops), tuple(deps))
+        self.last_compute_eid = eid
+        self.compute_eids[op.tile] = eid
+        # Residency bookkeeping: rows this tile wrote stay dirty until a
+        # download, an edge carry, or a §4.1 elision retires them.
+        for name, rows in op.writes:
+            for lo, hi in rows:
+                self.rm.mark_dirty(slot, name, lo, hi)
+
+    def execute_tile(self, op: Compute, slot) -> None:
+        pass
+
+    # -- edge carry -----------------------------------------------------------
+    def op_carry(self, op: CarryEdge) -> None:
+        slot = self.tile_slot[op.tile]
+        dst = self.tile_slot.get(op.tile + 1)
+        if dst is None:     # 1-slot pool: the next tile continues in-place
+            dst = slot
+        next_org = self.origins[op.tile + 1]
+        deps: List[int] = [self.last_compute_eid]
+        if self.last_download_eid.get(dst.index) is not None:
+            deps.append(self.last_download_eid[dst.index])
+        self.copy_edges(op, slot, dst, next_org)
+        for name, lo, hi in op.items:
+            self.rm.carry(slot, dst, name, lo, hi)
+        self.edge_bytes += op.nbytes
+        self.last_compute_eid = self.ledger.add(
+            0, "edge", op.nbytes, self.ledger.t_dd(2 * op.nbytes), tuple(deps))
+
+    def copy_edges(self, op: CarryEdge, slot, dst, next_org) -> None:
+        pass
+
+    # -- retire ---------------------------------------------------------------
+    def op_elide(self, op: Elide) -> None:
+        slot = self.tile_slot[op.tile]
+        for name, lo, hi in op.items:
+            self.rm.elide(slot, name, lo, hi)
+
+    def op_download(self, op: Download) -> None:
+        slot = self.tile_slot[op.tile]
+        deps = (self.compute_eids[op.tile],)
+        self.downloaded += op.raw
+        eid = self.stage_download(op, slot, deps)
+        self.last_download_eid[slot.index] = eid
+
+    def stage_download(self, op: Download, slot, deps) -> int:
+        wire = sum(self._wire(name, self._nbytes(name, lo, hi))
+                   for name, lo, hi in op.items)
+        self.downloaded_wire += wire
+        eid = self.ledger.add(2, "download", wire, self.ledger.t_down(wire),
+                              deps)
+        for name, lo, hi in op.items:
+            self.rm.writeback(slot, name, lo, hi)
+        return eid
+
+    def op_evict(self, op: Evict) -> None:
+        # The acquire in op_upload performs (and counts) the eviction; the op
+        # exists so plan-level counts match residency statistics.
+        pass
+
+    # -- speculative prefetch -------------------------------------------------
+    def op_prefetch(self, op: Prefetch) -> None:
+        self.spec.uploaded = {
+            name: tuple(Interval(lo, hi) for lo, hi in rows)
+            for name, rows in op.items
+        }
+        self.spec.data = {}
+        if op.wire:
+            deps = ((self.last_upload_eid,)
+                    if self.last_upload_eid is not None else ())
+            self.ledger.add(1, "prefetch", op.wire,
+                            self.ledger.t_up(op.wire), deps)
+        self.spec.sig = self.plan.sig_hash
+        self._prefetch_armed = True
+
+    # -- pinned flush ---------------------------------------------------------
+    def op_pin_flush(self, op: WritebackPinned) -> None:
+        raw = wire = 0
+        for name, rows, nb, w in op.entries:
+            r2, w2 = self.flush_pinned(name, rows, nb, w)
+            raw += r2
+            wire += w2
+            dat = self.datasets.get(name)
+            if dat is not None:
+                self.rm.pinned_mark_flushed(dat)
+        if wire:
+            self.downloaded += raw
+            self.downloaded_wire += wire
+            deps = ((self.last_compute_eid,)
+                    if self.last_compute_eid is not None else ())
+            self.ledger.add(2, "download", wire, self.ledger.t_down(wire), deps)
+
+    def flush_pinned(self, name, rows, nb, wire) -> Tuple[int, int]:
+        return nb, wire
+
+
+def simulate_plan(plan: Plan, hw: HardwareModel) -> InterpResult:
+    """Cost one plan on ``hw`` with cold caches (fresh residency/prefetch
+    state) — what :meth:`Session.explain` and the autotuner report."""
+    return LedgerInterpreter(plan, hw).run()
+
+
+# -- the real data plane -----------------------------------------------------------
+
+
+class DataPlaneInterpreter(LedgerInterpreter):
+    """Execute a plan for real: slot arrays, transfer-engine staging tasks,
+    codec round-trips, compiled tiles, pinned arrays and prefetch capture.
+
+    ``cp`` is the executor's memoised :class:`~repro.core.executor.ChainPlan`
+    (analysis, schedule, engine); ``tx`` the transfer engine; ``codecs`` the
+    resolved per-dataset codec map.  Ledger transfer events are recorded with
+    raw sizes at submission (dependency wiring needs ids in submission order)
+    and patched with achieved post-codec wire bytes after the engine drains.
+    """
+
+    def __init__(self, plan: Plan, hw: HardwareModel, *, rm, spec, cp, tx,
+                 codecs):
+        super().__init__(plan, hw, rm=rm, spec=spec,
+                         datasets=cp.info.datasets)
+        self.cp = cp
+        self.info = cp.info
+        self.sched = cp.sched
+        self.engine = cp.engine
+        self.tx = tx
+        self.codecs = codecs
+        self.td = plan.tiled_dim
+        self.patches: List[Tuple[int, Any, str]] = []
+        self.up_handles: Dict[int, Any] = {}
+        self.pinned_arrays: Dict[str, Any] = {}
+        self.pinned_origins: Dict[str, int] = {}
+        self.red_specs = {r.name: r for lp in cp.info.loops
+                          for r in lp.reductions}
+        self._prefetch_armed = False
+
+    # -- numpy/jax region helpers --------------------------------------------
+    def _dat_np_region(self, dat, iv: Interval) -> np.ndarray:
+        h = dat.halo[self.td][0]
+        idx = [slice(None)] * dat.ndim
+        idx[self.td] = slice(iv.lo + h, iv.hi + h)
+        return dat.data[tuple(idx)]
+
+    def _write_np_region(self, dat, iv: Interval, values: np.ndarray) -> None:
+        h = dat.halo[self.td][0]
+        idx = [slice(None)] * dat.ndim
+        idx[self.td] = slice(iv.lo + h, iv.hi + h)
+        dat.data[tuple(idx)] = values
+
+    @staticmethod
+    def _slot_slice(arr, lo: int, hi: int, td: int):
+        idx = [slice(None)] * arr.ndim
+        idx[td] = slice(lo, hi)
+        return tuple(idx)
+
+    # -- lifecycle ------------------------------------------------------------
+    def begin(self) -> None:
+        import jax.numpy as jnp
+
+        td = self.td
+        pinned = {n for n, _ in
+                  (e for op in self.plan.ops if isinstance(op, PinUpload)
+                   for e in op.entries)}
+        for slot in self.slots:
+            arrays = {}
+            for name, ln in self.sched.max_fp_len.items():
+                if name in pinned:
+                    continue
+                dat = self.info.datasets[name]
+                shape = list(dat.padded_shape)
+                shape[td] = ln
+                arrays[name] = jnp.zeros(tuple(shape), dtype=dat.dtype)
+            slot.arrays = arrays
+
+    def finish(self) -> None:
+        import jax.numpy as jnp
+
+        self.tx.drain()
+        # Patch transfer events with the achieved wire bytes (codec output is
+        # data-dependent, so threaded tasks only report it after the fact).
+        # ``ledger.totals`` accumulated the raw estimate at submission and
+        # must shift by the same delta to stay consistent with the events.
+        ledger = self.ledger
+        for eid, handle, direction in self.patches:
+            _, wire = handle.result
+            ev = ledger.events[eid]
+            ledger.totals[ev.kind] = (
+                ledger.totals.get(ev.kind, 0) + wire - ev.nbytes)
+            ev.nbytes = wire
+            ev.duration = (ledger.t_up(wire) if direction == UP
+                           else ledger.t_down(wire))
+            if direction == UP:
+                self.uploaded_wire += wire
+            else:
+                self.downloaded_wire += wire
+        # Speculative-prefetch data capture: home is stable now that
+        # downloads have drained, so snapshot the regions the next chain's
+        # first tile is assumed to upload.  ``jnp.array`` copies — the
+        # capture must not alias home rows a later chain will overwrite.
+        if self._prefetch_armed:
+            self.spec.data = {}
+            for name, ivs in self.spec.uploaded.items():
+                dat = self.info.datasets.get(name)
+                if dat is None:
+                    continue
+                self.spec.data[name] = [
+                    (iv, jnp.array(self._dat_np_region(dat, iv)), id(dat),
+                     dat.version)
+                    for iv in ivs]
+
+    # -- pinned residency -----------------------------------------------------
+    def pin_ensure(self, name: str, nb: int) -> Tuple[int, int]:
+        import jax.numpy as jnp
+
+        dat = self.info.datasets[name]
+        origin = -dat.halo[self.td][0]
+        hit = self.rm.pinned_lookup(dat)
+        if hit is not None:
+            arr, origin = hit
+            self.pinned_arrays[name] = arr
+            self.pinned_origins[name] = origin
+            return 0, 0
+        dec, raw, wire = self.codecs[name].roundtrip(dat.data)
+        arr = jnp.asarray(np.asarray(dec, dtype=dat.dtype))
+        self.rm.pinned_store(dat, arr, origin)
+        self.pinned_arrays[name] = arr
+        self.pinned_origins[name] = origin
+        return raw, wire
+
+    # -- staging --------------------------------------------------------------
+    def spec_lookup(self, name: str, iv: Interval):
+        """Data-plane prefetch resolution: a hit must be backed by a captured
+        device array whose dataset identity/version still matches home —
+        otherwise it degrades to a full miss (stage everything), never to
+        stale data."""
+        pre = self.spec.uploaded.get(name, ())
+        for j, piv in enumerate(pre):
+            hit = iv.intersect(piv)
+            if hit.empty or hit.lo != iv.lo:
+                continue
+            ents = self.spec.data.get(name, ())
+            ent = ents[j] if j < len(ents) else None
+            dat = self.info.datasets[name]
+            if (ent is not None and ent[0] == piv and ent[2] == id(dat)
+                    and ent[3] == dat.version):
+                self.prefetch_hits += 1
+                return Interval(hit.hi, iv.hi), (name, hit, ent[1], piv.lo)
+            return iv, None  # stale capture: stage everything from home
+        return iv, None
+
+    def _make_upload_task(self, slot, org, items, restores):
+        import jax.numpy as jnp
+
+        td = self.td
+        info = self.info
+        codecs = self.codecs
+        slot_slice = self._slot_slice
+        dat_np_region = self._dat_np_region
+
+        def task():
+            raw = wire = 0
+            # Prefetch restores: device-resident captures from the last
+            # chain's speculative upload — no link traffic (it was charged
+            # as the prefetch event back then).
+            for name, hit, arr, arr_lo in restores:
+                vals = arr[slot_slice(arr, hit.lo - arr_lo, hit.hi - arr_lo,
+                                      td)]
+                lo, hi = hit.lo - org[name], hit.hi - org[name]
+                with slot.lock:
+                    dst = slot.arrays[name]
+                    slot.arrays[name] = dst.at[
+                        slot_slice(dst, lo, hi, td)].set(vals)
+            for name, use in items:
+                dat = info.datasets[name]
+                chunk = dat_np_region(dat, use)
+                dec, r, w = codecs[name].roundtrip(chunk)
+                raw += r
+                wire += w
+                vals = jnp.asarray(np.asarray(dec, dtype=dat.dtype))
+                lo, hi = use.lo - org[name], use.hi - org[name]
+                # Disjoint-region updates commute, but the functional
+                # read-modify-write of the slot's dict entry must be atomic
+                # against the main thread's edge copy.
+                with slot.lock:
+                    arr = slot.arrays[name]
+                    slot.arrays[name] = arr.at[
+                        slot_slice(arr, lo, hi, td)].set(vals)
+            return raw, wire
+
+        return task
+
+    def stage_upload(self, op, slot, org, items, restores, raw, deps):
+        # Home rows a still-pending download is writing back must land
+        # before this staging read (cross-tile safety net; the footprint
+        # algebra keeps these disjoint in practice).
+        conflicts = [
+            h for name, iv in items
+            for h in self.rm.home_conflicts(name, iv.lo, iv.hi)]
+        handle = self.tx.submit(
+            UP, self._make_upload_task(slot, org, items, restores),
+            deps=conflicts)
+        self.up_handles[op.tile] = handle
+        for name, iv in items:
+            self.rm.note_home_read(name, iv.lo, iv.hi, handle)
+        if not raw:
+            # Pure prefetch restore: device-side only, no link event (the
+            # traffic was charged as last chain's prefetch).
+            return None
+        self.uploaded += raw
+        eid = self.ledger.add(1, "upload", raw, self.ledger.t_up(raw), deps)
+        self.patches.append((eid, handle, UP))
+        return eid
+
+    # -- compute --------------------------------------------------------------
+    def execute_tile(self, op: Compute, slot) -> None:
+        handle = self.up_handles.get(op.tile)
+        if handle is not None:
+            handle.wait()   # tile's staging must have landed
+        tile = self.sched.tiles[op.tile]
+        run_arrays = {**slot.arrays, **self.pinned_arrays}
+        run_origins = {**self.origins[op.tile], **self.pinned_origins}
+        new_arrays, tile_reds = self.engine.run_tile(tile, run_arrays,
+                                                     run_origins)
+        for name in self.pinned_arrays:
+            self.pinned_arrays[name] = new_arrays[name]
+            self.rm.pinned_update(self.info.datasets[name], new_arrays[name])
+        slot.arrays = {n: a for n, a in new_arrays.items()
+                       if n not in self.pinned_arrays}
+        for name, val in tile_reds.items():
+            spec = self.red_specs[name]
+            if name in self.reductions:
+                self.reductions[name] = np.asarray(
+                    spec.combine(self.reductions[name], val))
+            else:
+                self.reductions[name] = np.asarray(val)
+
+    # -- edge carry -----------------------------------------------------------
+    def copy_edges(self, op: CarryEdge, slot, dst, next_org) -> None:
+        td = self.td
+        org = self.origins[op.tile]
+        for name, lo, hi in op.items:
+            src = slot.arrays[name]
+            vals = src[self._slot_slice(src, lo - org[name], hi - org[name],
+                                        td)]
+            with dst.lock:
+                darr = dst.arrays[name]
+                dst.arrays[name] = darr.at[
+                    self._slot_slice(darr, lo - next_org[name],
+                                     hi - next_org[name], td)].set(vals)
+
+    # -- download -------------------------------------------------------------
+    def _make_download_task(self, arrays, org, items):
+        td = self.td
+        info = self.info
+        codecs = self.codecs
+        slot_slice = self._slot_slice
+        write_np_region = self._write_np_region
+
+        def task():
+            raw = wire = 0
+            for name, iv in items:
+                dat = info.datasets[name]
+                lo, hi = iv.lo - org[name], iv.hi - org[name]
+                arr = arrays[name]
+                vals = np.asarray(arr[slot_slice(arr, lo, hi, td)])
+                dec, r, w = codecs[name].roundtrip(vals)
+                raw += r
+                wire += w
+                write_np_region(dat, iv, np.asarray(dec, dat.dtype))
+            return raw, wire
+
+        return task
+
+    def stage_download(self, op: Download, slot, deps) -> int:
+        org = self.origins[op.tile]
+        items = [(name, Interval(lo, hi)) for name, lo, hi in op.items]
+        # Snapshot the arrays: a later tile's upload functionally replaces
+        # dict entries, never the captured values.  The home write must also
+        # wait for earlier-queued uploads still reading overlapping home rows
+        # (tile t+1's upload is submitted before tile t's download).
+        read_deps = [
+            h for name, iv in items
+            for h in self.rm.home_read_conflicts(name, iv.lo, iv.hi)]
+        handle = self.tx.submit(
+            DOWN, self._make_download_task(dict(slot.arrays), org, items),
+            deps=read_deps)
+        eid = self.ledger.add(2, "download", op.raw,
+                              self.ledger.t_down(op.raw), deps)
+        self.patches.append((eid, handle, DOWN))
+        for name, iv in items:
+            self.rm.writeback(slot, name, iv.lo, iv.hi, handle)
+        return eid
+
+    # -- pinned flush ---------------------------------------------------------
+    def flush_pinned(self, name, rows, nb, wire) -> Tuple[int, int]:
+        dat = self.info.datasets[name]
+        arr = self.pinned_arrays[name]
+        origin = self.pinned_origins[name]
+        raw_tot = wire_tot = 0
+        for lo, hi in rows:
+            vals = np.asarray(arr[self._slot_slice(
+                arr, lo - origin, hi - origin, self.td)])
+            dec, r, w = self.codecs[name].roundtrip(vals)
+            raw_tot += r
+            wire_tot += w
+            self._write_np_region(dat, Interval(lo, hi),
+                                  np.asarray(dec, dat.dtype))
+        return raw_tot, wire_tot

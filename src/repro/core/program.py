@@ -466,9 +466,14 @@ class Session:
 
     # -- flushing ---------------------------------------------------------------
     def flush(self) -> None:
-        """Execute every queued loop, splitting chains at block boundaries."""
+        """Execute every queued loop, splitting chains at block boundaries.
+
+        Reduction results from *previous* flushes are dropped here: a
+        reduction stays readable (any number of times) until the next flush
+        that actually executes loops replaces it."""
         if not self.queue:
             return
+        self._red_results.clear()
         queue, self.queue = self.queue, []
         chain: List[ParallelLoop] = []
         for lp in queue:
@@ -494,10 +499,102 @@ class Session:
         return dat.data.copy()
 
     def reduction(self, name: str) -> np.ndarray:
+        """Flush and return reduction ``name``.  Results are *retained* until
+        the next flush, so reading the same reduction twice is legal (it used
+        to raise ``KeyError`` on the second read)."""
         self.flush()
         if name not in self._red_results:
             raise KeyError(f"no reduction {name!r} has been produced")
-        return self._red_results.pop(name)
+        return self._red_results[name]
+
+    # -- plans: inspect before you execute -----------------------------------------
+    def _planning_executor(self):
+        """The OOC executor that builds Plan IRs for this session's backend."""
+        from .executor import OutOfCoreExecutor, ResidentExecutor
+
+        be = self.backend
+        if isinstance(be, OutOfCoreExecutor):
+            return be
+        if isinstance(be, ResidentExecutor):
+            return be._inner
+        raise ValueError(
+            f"backend {type(be).__name__} does not build plans; use an "
+            f"ooc/ooc-async/ooc-cyclic/sim/resident session")
+
+    def plan(self, loops=None):
+        """Lower the queued loops (or ``loops``) to their Plan IRs *without*
+        executing anything — the queue is untouched.  Returns one
+        :class:`~repro.core.plan.Plan` per chain, in execution order,
+        including the chains a MemoryError split would produce."""
+        loops = list(self.queue) if loops is None else list(loops)
+        if not loops:
+            return []
+        ex = self._planning_executor()
+        plans = []
+        chain: List[ParallelLoop] = []
+        for lp in loops:
+            if chain and lp.block is not chain[0].block:
+                plans.extend(self._plan_split(ex, chain, frozenset()))
+                chain = []
+            chain.append(lp)
+        if chain:
+            plans.extend(self._plan_split(ex, chain, frozenset()))
+        return plans
+
+    def _plan_split(self, ex, loops, keep_live):
+        """Mirror ``run_chain``'s MemoryError chain splitting, plans only."""
+        try:
+            return [ex.plan_chain(loops, keep_live).ir]
+        except MemoryError:
+            if len(loops) <= 1:
+                raise
+            mid = len(loops) // 2
+            head, tail = loops[:mid], loops[mid:]
+            tail_reads = frozenset(
+                a.dat.name for lp in tail for a in lp.args if a.mode.reads)
+            return (self._plan_split(ex, head, keep_live | tail_reads)
+                    + self._plan_split(ex, tail, keep_live))
+
+    def explain(self, loops=None) -> str:
+        """Human-readable per-tile op listing for the queued loops (or
+        ``loops``): staging/compute/carry/download per tile with modelled
+        bytes, op totals, and the ledger-modelled makespan per chain."""
+        from .plan import format_plan
+
+        plans = self.plan(loops)
+        if not plans:
+            return "(nothing queued: record loops before explain())"
+        hw = self.config.hw if self.config is not None else getattr(
+            getattr(self.backend, "cfg", None), "hw", None)
+        return "\n\n".join(
+            format_plan(p, hw, title=f"chain {i}/{len(plans)}")
+            for i, p in enumerate(plans))
+
+    def tune(self, loops=None, *, apply: bool = False, repeats: int = 2,
+             **grids):
+        """Enumerate candidate configs (``num_tiles`` × ``tiled_dim`` ×
+        ``num_slots`` × codec), cost each on the queued loops (or ``loops``)
+        via the sim interpreter, and return the best as a
+        :class:`~repro.core.tune.TuneResult` — modelled makespan never worse
+        than this session's config, which is always a candidate.  With
+        ``apply=True`` the session's backend is rebuilt around the winner
+        (the queue survives: loops reference datasets, not the backend)."""
+        from .tune import tune_configs
+
+        loops = list(self.queue) if loops is None else list(loops)
+        if self.config is None:
+            raise ValueError(
+                "sessions over a hand-built backend object have no "
+                "ExecutionConfig to tune")
+        result = tune_configs(loops, self.config, repeats=repeats, **grids)
+        if apply:
+            old = getattr(self.backend, "close", None)
+            if old is not None:
+                old()
+            self.config = result.best
+            self.backend = make_backend(result.best)
+            self.executor = self.backend
+        return result
 
     # -- introspection -----------------------------------------------------------
     @property

@@ -1,0 +1,369 @@
+"""Plan IR tests: typed op streams, planner/interpreter equivalence, JSON
+round-trips, Session.plan()/explain(), the sim-driven autotuner, and the
+reduction-retention regression."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Arg,
+    CarryEdge,
+    Compute,
+    Download,
+    Elide,
+    Evict,
+    OOCConfig,
+    OutOfCoreExecutor,
+    P100_PCIE,
+    Plan,
+    Prefetch,
+    READ,
+    RW,
+    ReductionSpec,
+    Session,
+    Upload,
+    WRITE,
+    Block,
+    make_dataset,
+    plans_from_json,
+    plans_to_json,
+    point_stencil,
+    simulate_plan,
+    star_stencil,
+)
+
+
+def heat_loops(rt, n, m, steps, seed=7, reduce_=False):
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(seed)
+    blk = Block("grid", (n, m))
+    u = make_dataset(blk, "u", halo=1, init=rng.rand(n, m).astype(np.float32))
+    tmp = make_dataset(blk, "tmp", halo=1)
+    S, Z = star_stencil(2, 1), point_stencil(2)
+    interior = ((1, n - 1), (1, m - 1))
+    for s in range(steps):
+        rt.par_loop(
+            f"avg{s}", blk, interior, [Arg(u, S, READ), Arg(tmp, Z, WRITE)],
+            lambda acc: {"tmp": 0.25 * (acc("u", (1, 0)) + acc("u", (-1, 0))
+                                        + acc("u", (0, 1)) + acc("u", (0, -1)))})
+        rt.par_loop(
+            f"copy{s}", blk, interior, [Arg(tmp, Z, READ), Arg(u, Z, RW)],
+            lambda acc: {"u": acc("tmp")})
+    if reduce_:
+        rt.par_loop(
+            "sum", blk, interior, [Arg(u, Z, READ)],
+            lambda acc: {"total": jnp.sum(acc("u"))},
+            reductions=[ReductionSpec("total", "sum")])
+    return u
+
+
+def cl2d_step_session(backend, nx=40, ny=24, **kw):
+    """A Session with one recorded CloverLeaf2D timestep chain (unflushed)."""
+    from repro.apps import CloverLeaf2D
+
+    app = CloverLeaf2D(nx, ny, summary_every=0)
+    sess = Session(backend, num_tiles=4, capacity_bytes=float("inf"), **kw)
+    app.record_init(sess)
+    sess.queue.clear()          # plan/run the timestep chain only
+    app.dt = 1e-4
+    app.record_timestep(sess)
+    return app, sess
+
+
+class TestPlanStructure:
+    def test_op_stream_shape(self):
+        sess = Session("sim", num_tiles=4, capacity_bytes=float("inf"))
+        heat_loops(sess, 40, 24, 2)
+        (plan,) = sess.plan()
+        kinds = [op.kind for op in plan.ops]
+        assert plan.num_tiles == 4 and plan.num_slots == 3
+        assert kinds.count("compute") == 4
+        # pipelined: tile 1's upload is submitted before tile 0's compute
+        assert kinds.index("upload") < kinds.index("compute")
+        assert kinds[:3] == ["upload", "upload", "compute"]
+        # one eviction: 4 tiles through 3 slots
+        evicts = [op for op in plan.ops if isinstance(op, Evict)]
+        assert [(e.tile, e.slot) for e in evicts] == [(3, 0)]
+        # slot assignment is the round-robin the LRU pool degenerates to
+        for op in plan.ops:
+            if isinstance(op, (Upload, Compute, Download)):
+                assert op.slot == op.tile % plan.num_slots
+        counts = plan.counts()
+        assert counts["computes"] == 4 and counts["evictions"] == 1
+        assert counts["carries"] == 3            # every tile boundary
+        assert plan.totals()["uploaded"] > 0
+
+    def test_cyclic_elision_and_prefetch_ops(self):
+        sess = Session("sim", num_tiles=4, capacity_bytes=float("inf"),
+                       cyclic=True, prefetch=True)
+        heat_loops(sess, 40, 24, 2)
+        (plan,) = sess.plan()
+        assert plan.cyclic and plan.prefetch
+        assert any(isinstance(op, Elide) for op in plan.ops)   # tmp is dead
+        pf = [op for op in plan.ops if isinstance(op, Prefetch)]
+        assert len(pf) == 1 and pf[0].wire > 0
+        # elided temporaries never download
+        for op in plan.ops:
+            if isinstance(op, Download):
+                assert all(name != "tmp" for name, _, _ in op.items)
+
+    def test_one_slot_pool_orders_in_order(self):
+        sess = Session("sim", num_tiles=3, num_slots=1,
+                       capacity_bytes=float("inf"))
+        heat_loops(sess, 40, 24, 1)
+        (plan,) = sess.plan()
+        assert not plan.early_submit
+        kinds = [op.kind for op in plan.ops]
+        # strict order: compute 0 retires before upload 1 is staged
+        assert kinds.index("compute") < kinds.index("evict")
+        for op in plan.ops:
+            if isinstance(op, CarryEdge):
+                assert op.dst_slot == 0    # the single slot continues
+
+    def test_keep_live_blocks_elision(self):
+        ex = OutOfCoreExecutor(OOCConfig(num_tiles=4,
+                                         capacity_bytes=float("inf"),
+                                         cyclic=True))
+        sess = Session(backend=ex)
+        heat_loops(sess, 40, 24, 2)
+        loops = list(sess.queue)
+        free = ex.plan_chain(loops).ir
+        held = ex.plan_chain(loops, keep_live=frozenset({"tmp"})).ir
+        assert any(isinstance(op, Elide) for op in free.ops)
+        assert not any(isinstance(op, Elide) for op in held.ops)
+        assert held.keep_live == ("tmp",)
+
+
+class TestInterpreterEquivalence:
+    def test_sim_and_real_share_the_op_stream(self):
+        """The acceptance criterion: ooc, ooc-async and sim lower one chain
+        to the *same* instruction stream, and (identity codec) the modelled
+        makespans agree exactly."""
+        plans = {}
+        spans = {}
+        for backend in ("ooc", "ooc-async", "sim"):
+            app, sess = cl2d_step_session(backend)
+            (plans[backend],) = sess.plan()
+            sess.flush()
+            spans[backend] = sess.history[-1].modelled_s
+            sess.close()
+        assert plans["ooc"] == plans["sim"] == plans["ooc-async"]
+        assert spans["ooc"] == spans["sim"] == spans["ooc-async"]
+
+    def test_plan_preview_matches_execution(self):
+        """Session.plan() must predict exactly what run_chain interprets
+        (same cached ChainPlan, no re-planning, queue untouched)."""
+        app, sess = cl2d_step_session("sim")
+        n_queued = len(sess.queue)
+        (preview,) = sess.plan()
+        assert len(sess.queue) == n_queued
+        sess.flush()
+        st = sess.history[-1]
+        assert st.op_counts == preview.counts()
+        assert sess.plan_stats()["plan_hits"] >= 1   # flush reused the plan
+
+    def test_simulate_plan_matches_sim_backend(self):
+        app, sess = cl2d_step_session("sim")
+        (plan,) = sess.plan()
+        res = simulate_plan(plan, sess.config.hw)
+        sess.flush()
+        st = sess.history[-1]
+        assert res.makespan == pytest.approx(st.modelled_s)
+        assert res.uploaded == st.uploaded
+        assert res.downloaded == st.downloaded
+
+
+class TestPlanJSON:
+    def test_round_trip_equality(self):
+        for backend, kw in (("sim", {}), ("sim", {"cyclic": True,
+                                                  "prefetch": True})):
+            app, sess = cl2d_step_session(backend, **kw)
+            (plan,) = sess.plan()
+            back = Plan.from_json(plan.to_json())
+            assert back == plan
+            assert back.counts() == plan.counts()
+
+    def test_multi_plan_document(self):
+        app, sess = cl2d_step_session("sim")
+        plans = sess.plan()
+        back = plans_from_json(plans_to_json(plans))
+        assert back == plans
+
+    def test_imported_plan_interprets_bit_identical(self):
+        """export -> import -> interpret must produce bit-identical data."""
+        def run(use_import):
+            app, sess = cl2d_step_session("ooc")
+            loops = list(sess.queue)
+            sess.queue.clear()
+            ex = sess.backend
+            if use_import:
+                ir = Plan.from_json(ex.plan_chain(loops).ir.to_json())
+                ex.run_chain(loops, plan=ir)
+            else:
+                ex.run_chain(loops)
+            out = {n: d.data.copy() for n, d in app.dats.items()}
+            sess.close()
+            return out
+        a, b = run(False), run(True)
+        assert set(a) == set(b)
+        for name in a:
+            np.testing.assert_array_equal(a[name], b[name])
+
+    def test_mismatched_import_rejected(self):
+        app, sess = cl2d_step_session("ooc")
+        loops = list(sess.queue)
+        sess.queue.clear()
+        other = Session("sim", num_tiles=2, capacity_bytes=float("inf"))
+        heat_loops(other, 32, 16, 1)
+        (foreign,) = other.plan()
+        with pytest.raises(ValueError, match="does not match"):
+            sess.backend.run_chain(loops, plan=foreign)
+        sess.close()
+
+    def test_mismatched_geometry_rejected(self):
+        """Same chain, different tile geometry: the imported stream must be
+        rejected up front, not fail deep inside the transfer engine."""
+        app, sess = cl2d_step_session("ooc")
+        loops = list(sess.queue)
+        sess.queue.clear()
+        other = Session("sim", num_tiles=2, capacity_bytes=float("inf"))
+        ir = other.backend.plan_chain(loops).ir   # 2 tiles vs session's 4
+        with pytest.raises(ValueError, match="tile geometry"):
+            sess.backend.run_chain(loops, plan=ir)
+        sess.close()
+
+    def test_bad_version_rejected(self):
+        doc = {"version": 99, "meta": {}, "ops": []}
+        with pytest.raises(ValueError, match="version"):
+            Plan.from_json(json.dumps(doc))
+
+
+class TestExplain:
+    @pytest.mark.parametrize("app_name", ["cloverleaf2d", "cloverleaf3d",
+                                          "opensbli"])
+    def test_explain_and_json_on_all_apps(self, app_name):
+        from repro.apps import CloverLeaf2D, CloverLeaf3D, OpenSBLI
+
+        build = {"cloverleaf2d": lambda: CloverLeaf2D(32, 24, summary_every=0),
+                 "cloverleaf3d": lambda: CloverLeaf3D(12, 10, 8),
+                 "opensbli": lambda: OpenSBLI(16)}[app_name]
+        app = build()
+        sess = Session("sim", num_tiles=3, capacity_bytes=float("inf"))
+        app.record_init(sess)
+        sess.queue.clear()
+        app.dt = 1e-4
+        app.record_timestep(sess)
+        text = sess.explain()
+        assert "tiles x" in text and "compute" in text
+        assert "modelled makespan" in text
+        for plan in sess.plan():
+            assert Plan.from_json(plan.to_json()) == plan
+
+    def test_explain_empty_queue(self):
+        sess = Session("sim")
+        assert "nothing queued" in sess.explain()
+
+    def test_plan_requires_planning_backend(self):
+        sess = Session("reference")
+        heat_loops(sess, 16, 8, 1)
+        with pytest.raises(ValueError, match="does not build plans"):
+            sess.plan()
+
+
+class TestTune:
+    def _transfer_bound_session(self):
+        from repro.apps import CloverLeaf2D
+
+        hw = P100_PCIE.with_(link_latency=1e-6, up_bw=2e9, down_bw=2e9)
+        app = CloverLeaf2D(48, 32, summary_every=0)
+        sess = Session("sim", hw=hw, num_tiles=4,
+                       capacity_bytes=app.total_bytes() / 2)
+        app.record_init(sess)
+        sess.queue.clear()
+        app.dt = 1e-4
+        app.record_timestep(sess)
+        return sess
+
+    def test_tune_never_worse_than_default(self):
+        sess = self._transfer_bound_session()
+        res = sess.tune()
+        assert res.best_makespan <= res.baseline_makespan
+        assert res.speedup >= 1.0
+        assert any(r["feasible"] for r in res.rows)
+        assert "best" in res.summary()
+
+    def test_tune_respects_capacity(self):
+        sess = self._transfer_bound_session()
+        res = sess.tune(num_tiles=(1, 2, None), num_slots=(3,),
+                        tiled_dims=(0,))
+        one_tile = [r for r in res.rows if r["num_tiles"] == 1]
+        assert one_tile and not one_tile[0]["feasible"]   # 1 tile can't fit
+        assert res.best.num_tiles != 1
+
+    def test_tune_apply_rebuilds_backend(self):
+        sess = self._transfer_bound_session()
+        res = sess.tune(apply=True)
+        assert sess.config == res.best
+        sess.flush()    # the queue survived and runs under the new config
+        assert sess.history[-1].modelled_s > 0
+
+    def test_tune_empty_queue_raises(self):
+        sess = Session("sim")
+        with pytest.raises(ValueError, match="record loops"):
+            sess.tune()
+
+    def test_tune_rejects_nonplanning_backend(self):
+        sess = Session("reference")
+        heat_loops(sess, 16, 8, 1)
+        with pytest.raises(ValueError, match="no planner"):
+            sess.tune()
+
+
+class TestChainStatsOps:
+    def test_op_counts_in_history(self):
+        sess = Session("sim", num_tiles=4, capacity_bytes=float("inf"),
+                       cyclic=True)
+        heat_loops(sess, 40, 24, 2)
+        sess.flush()
+        ops = sess.history[-1].op_counts
+        assert ops["computes"] == 4
+        assert ops["uploads"] >= 1 and ops["downloads"] >= 1
+        assert ops["elisions"] >= 1      # cyclic: tmp elided
+        assert ops["evictions"] == 1
+
+
+class TestReductionRetention:
+    def test_second_read_returns_same_value(self):
+        """Regression: Session.reduction() used to pop its result, so a
+        second read of the same reduction raised KeyError."""
+        sess = Session("reference")
+        heat_loops(sess, 24, 16, 1, reduce_=True)
+        first = sess.reduction("total")
+        second = sess.reduction("total")
+        np.testing.assert_array_equal(first, second)
+
+    def test_next_flush_replaces_results(self):
+        import jax.numpy as jnp
+
+        sess = Session("reference")
+        blk = Block("g", (8, 8))
+        rng = np.random.RandomState(3)
+        u = make_dataset(blk, "u", halo=1,
+                         init=rng.rand(8, 8).astype(np.float32))
+        Z = point_stencil(2)
+
+        def record(scale):
+            sess.par_loop(
+                "s", blk, ((1, 7), (1, 7)), [Arg(u, Z, READ)],
+                lambda acc: {"total": scale * jnp.sum(acc("u"))},
+                reductions=[ReductionSpec("total", "sum")])
+
+        record(1.0)
+        t1 = float(sess.reduction("total"))
+        record(2.0)
+        t2 = float(sess.reduction("total"))
+        assert t2 == pytest.approx(2 * t1, rel=1e-5)
+        # the old result is gone after the new flush, not accumulated
+        assert float(sess.reduction("total")) == t2

@@ -436,16 +436,16 @@ class TestExecutorIntegration:
     def test_ledger_totals_consistent_with_codec(self, monkeypatch):
         """TransferLedger.summary() byte totals must reflect post-codec wire
         bytes, matching the patched events and the modelled makespan."""
-        import repro.core.executor as exmod
+        import repro.core.interp as interpmod
 
         captured = []
 
-        class CapturingLedger(exmod.TransferLedger):
+        class CapturingLedger(interpmod.TransferLedger):
             def __init__(self, hw):
                 super().__init__(hw)
                 captured.append(self)
 
-        monkeypatch.setattr(exmod, "TransferLedger", CapturingLedger)
+        monkeypatch.setattr(interpmod, "TransferLedger", CapturingLedger)
         sess = Session("ooc", num_tiles=4, capacity_bytes=float("inf"),
                        codec="fp16")
         _heat(sess, 40, 16, 3)
