@@ -40,11 +40,16 @@ class CloverLeaf2D:
     ny: int
     dtype: type = np.float32
     summary_every: int = 10
+    # Home-copy tier for every dataset: None/"ram" (default), "mmap",
+    # "chunked", or a repro.core.StoreConfig (see repro.core.store).
+    store: object = None
 
     def __post_init__(self):
         nx, ny = self.nx, self.ny
         self.block = Block("clover2d", (nx, ny))
-        mk = lambda name, halo=2: make_dataset(self.block, name, halo=halo, dtype=self.dtype)
+        mk = lambda name, halo=2: make_dataset(self.block, name, halo=halo,
+                                               dtype=self.dtype,
+                                               store=self.store)
         # 25 datasets, as in the original (§5.1).
         names_cell = [
             "density0", "density1", "energy0", "energy1", "pressure",

@@ -33,11 +33,15 @@ class CloverLeaf3D:
     nz: int
     dtype: type = np.float32
     summary_every: int = 10
+    # Home-copy tier (repro.core.store): None/"ram", "mmap", "chunked", or
+    # a StoreConfig.
+    store: object = None
 
     def __post_init__(self):
         nx, ny, nz = self.nx, self.ny, self.nz
         self.block = Block("clover3d", (nx, ny, nz))
-        mk = lambda name: make_dataset(self.block, name, halo=2, dtype=self.dtype)
+        mk = lambda name: make_dataset(self.block, name, halo=2,
+                                       dtype=self.dtype, store=self.store)
         names = [
             "density0", "density1", "energy0", "energy1", "pressure",
             "viscosity", "soundspeed", "volume",

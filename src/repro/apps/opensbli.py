@@ -34,11 +34,15 @@ class OpenSBLI:
     n: int                       # cubic grid n^3
     dtype: type = np.float32
     chain_steps: int = 1         # timesteps per flush (the paper's 1/2/3)
+    # Home-copy tier (repro.core.store): None/"ram", "mmap", "chunked", or
+    # a StoreConfig.
+    store: object = None
 
     def __post_init__(self):
         n = self.n
         self.block = Block("sbli", (n, n, n))
-        mk = lambda name: make_dataset(self.block, name, halo=2, dtype=self.dtype)
+        mk = lambda name: make_dataset(self.block, name, halo=2,
+                                       dtype=self.dtype, store=self.store)
         # 29 datasets: 5 conserved + 5 RK work + 5 residual + 5 primitive +
         # 6 shear/stress workspace + 3 metric.
         cons = ["rho", "rhou", "rhov", "rhow", "rhoE"]

@@ -31,16 +31,31 @@ from .plan import (
     Download,
     Elide,
     Evict,
+    FetchHome,
     PinUpload,
     Plan,
     PlanOp,
     Prefetch,
+    SpillHome,
     Upload,
     WritebackPinned,
     build_plan,
     format_plan,
     plans_from_json,
     plans_to_json,
+)
+from .store import (
+    BackingStore,
+    ChunkedStore,
+    MmapStore,
+    RamStore,
+    StoreConfig,
+    StoreError,
+    available_stores,
+    load_checkpoint,
+    make_store,
+    register_store,
+    save_checkpoint,
 )
 from .tune import TuneResult, tune_configs
 from .program import (
@@ -103,8 +118,12 @@ __all__ = [
     "Codec", "register_codec", "get_codec", "available_codecs",
     "TransferEngine", "TransferError", "ResidencyManager", "ResidencyError",
     "Plan", "PlanOp", "Upload", "Download", "Compute", "CarryEdge", "Elide",
-    "Evict", "Prefetch", "PinUpload", "WritebackPinned", "build_plan",
+    "Evict", "Prefetch", "PinUpload", "WritebackPinned", "FetchHome",
+    "SpillHome", "build_plan",
     "format_plan", "plans_to_json", "plans_from_json",
+    "BackingStore", "RamStore", "MmapStore", "ChunkedStore", "StoreConfig",
+    "StoreError", "make_store", "register_store", "available_stores",
+    "save_checkpoint", "load_checkpoint",
     "LedgerInterpreter", "DataPlaneInterpreter", "InterpResult", "SpecState",
     "simulate_plan", "TuneResult", "tune_configs",
 ]

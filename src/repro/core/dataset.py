@@ -1,51 +1,109 @@
 """Datasets — grid-resident arrays owned by the runtime (``ops_dat``).
 
-A dataset lives in *slow memory* (host DRAM, represented as a NumPy array)
-as its home location; the out-of-core executor stages footprints of it into
-*fast memory* (device HBM) per tile.  Users only hold opaque handles; data
-returns to user space through ``fetch`` (which is also what terminates lazy
-loop chains, exactly as in OPS).
+A dataset lives in *slow memory* as its home location; the out-of-core
+executor stages footprints of it into *fast memory* (device HBM) per tile.
+Since the tiered-storage subsystem (:mod:`repro.core.store`) the home copy is
+a pluggable :class:`~repro.core.store.BackingStore` — in-RAM NumPy (``ram``,
+the default and the previous behaviour), an ``np.memmap`` over a spill
+directory (``mmap``), or codec-compressed chunks on disk behind an LRU cache
+(``chunked``) — so the hierarchy no longer stops at host RAM.  Users only
+hold opaque handles; data returns to user space through ``fetch`` (which is
+also what terminates lazy loop chains, exactly as in OPS).
+
+Migration note: ``Dataset`` is no longer a dataclass; the constructor
+signature is unchanged (``block, name, dtype, halo, data=None, version=0``)
+plus the new ``store=``.  ``.data`` is now a property returning the live
+backing array for ``ram``/``mmap`` homes and raising
+:class:`~repro.core.store.StoreError` for ``chunked`` ones — store-agnostic
+code uses ``read``/``write``/``read_rows``/``write_rows``/``materialize``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
 from .block import Block
+from .store import BackingStore, StoreConfig, make_store
 
 
-@dataclass
 class Dataset:
     """An array defined over a block, with per-dimension halo padding.
 
-    The backing array spans ``[-halo[d][0], size[d] + halo[d][1])`` per dim.
+    The backing store spans ``[-halo[d][0], size[d] + halo[d][1])`` per dim.
     Index convention throughout the runtime: *grid coordinates* (interior
     starts at 0); array index = grid index + halo_lo.
+
+    ``version`` is bumped on every user-space ``write``; device-side caches
+    (the residency manager's pinned arrays, speculative-prefetch captures)
+    key on it to notice a changed home copy.
     """
 
-    block: Block
-    name: str
-    dtype: np.dtype
-    halo: Tuple[Tuple[int, int], ...]
-    data: np.ndarray = field(repr=False, default=None)
-    # Bumped on every user-space ``write``; device-side caches (the residency
-    # manager's pinned arrays) key on it to notice a changed home copy.
-    version: int = field(default=0, compare=False)
-
-    def __post_init__(self) -> None:
-        if len(self.halo) != self.block.ndim:
+    def __init__(self, block: Block, name: str, dtype,
+                 halo: Tuple[Tuple[int, int], ...],
+                 data: Optional[np.ndarray] = None, version: int = 0,
+                 store: Union[None, str, StoreConfig, BackingStore] = None):
+        self.block = block
+        self.name = name
+        self.dtype = np.dtype(dtype)
+        self.halo = tuple(tuple(int(x) for x in h) for h in halo)
+        self.version = version
+        if len(self.halo) != block.ndim:
             raise ValueError(f"dat {self.name!r}: halo arity mismatch")
         shape = self.padded_shape
-        if self.data is None:
-            self.data = np.zeros(shape, dtype=self.dtype)
-        else:
-            self.data = np.asarray(self.data, dtype=self.dtype)
-            if self.data.shape != shape:
+        if data is not None:
+            if isinstance(store, BackingStore):
                 raise ValueError(
-                    f"dat {self.name!r}: data shape {self.data.shape} != padded {shape}"
+                    f"dat {self.name!r}: pass data= or a ready store, not both")
+            data = np.asarray(data, dtype=self.dtype)
+            if data.shape != shape:
+                raise ValueError(
+                    f"dat {self.name!r}: data shape {data.shape} != padded {shape}"
                 )
+        self._store = make_store(store, name=name, shape=shape,
+                                 dtype=self.dtype, data=data)
+
+    @classmethod
+    def from_store(cls, block: Block, name: str, store: BackingStore,
+                   halo: Union[int, Tuple[Tuple[int, int], ...]] = 1,
+                   dtype=None) -> "Dataset":
+        """Wrap an existing backing store (e.g. a reopened ``MmapStore``) as
+        a dataset; shape/dtype are validated against block + halo."""
+        if isinstance(halo, int):
+            halo = tuple((halo, halo) for _ in range(block.ndim))
+        return cls(block=block, name=name,
+                   dtype=store.dtype if dtype is None else dtype,
+                   halo=halo, store=store)
+
+    def __repr__(self) -> str:
+        return (f"Dataset(name={self.name!r}, block={self.block.name!r}, "
+                f"dtype={self.dtype.str}, halo={self.halo}, "
+                f"store={self._store.kind!r}, version={self.version})")
+
+    # -- the backing store ---------------------------------------------------
+    @property
+    def store(self) -> BackingStore:
+        return self._store
+
+    @property
+    def data(self) -> np.ndarray:
+        """The live home array (``ram``/``mmap``); raises for ``chunked``."""
+        return self._store.as_array()
+
+    def materialize(self) -> np.ndarray:
+        """The whole padded array — a live view for RAM-resident stores, a
+        fresh assembly for ``chunked`` (checkpointing / ``fetch_raw``)."""
+        return self._store.materialize()
+
+    def flush_store(self) -> int:
+        """Persist dirty home state to disk; returns disk bytes written."""
+        return self._store.flush()
+
+    def store_stats(self) -> dict:
+        return dict(self._store.stats)
+
+    def close(self) -> None:
+        self._store.close()
 
     # -- geometry -----------------------------------------------------------
     @property
@@ -65,7 +123,9 @@ class Dataset:
 
     @property
     def nbytes(self) -> int:
-        return int(self.data.nbytes)
+        """Logical (uncompressed) home-copy size; what capacity planning and
+        the host-tier oracle count, independent of at-rest compression."""
+        return self._store.nbytes
 
     # -- host-side access (grid coordinates) --------------------------------
     def _to_index(self, grid_slices: Tuple[slice, ...]) -> Tuple[slice, ...]:
@@ -75,13 +135,56 @@ class Dataset:
             idx.append(slice(sl.start + h, sl.stop + h))
         return tuple(idx)
 
+    def _rows_index(self, dim: int, lo: int, hi: int) -> Tuple[slice, ...]:
+        idx = [slice(None)] * self.ndim
+        idx[dim] = slice(lo + self.halo[dim][0], hi + self.halo[dim][0])
+        return tuple(idx)
+
     def read(self, grid_box: Tuple[Tuple[int, int], ...]) -> np.ndarray:
         """Read a grid-coordinate box from the slow-memory home copy."""
-        return self.data[self._to_index(tuple(slice(a, b) for a, b in grid_box))]
+        return self._store.read(
+            self._to_index(tuple(slice(a, b) for a, b in grid_box)))
 
     def write(self, grid_box: Tuple[Tuple[int, int], ...], values: np.ndarray) -> None:
-        self.data[self._to_index(tuple(slice(a, b) for a, b in grid_box))] = values
+        """User-space write: bumps ``version`` so device-side caches notice.
+
+        An empty box is a no-op and does NOT bump the version — a spurious
+        bump would invalidate pinned-dataset caching for zero actual change.
+        """
+        grid_box = tuple(grid_box)
+        if any(b <= a for a, b in grid_box):
+            return
+        self._store.write(
+            self._to_index(tuple(slice(a, b) for a, b in grid_box)), values)
         self.version += 1
+
+    # -- runtime-internal access (no version bump) ---------------------------
+    def read_region(self, index: Tuple[slice, ...]) -> np.ndarray:
+        """Array-index-space read (may be a view for ``ram``/``mmap``)."""
+        return self._store.read(tuple(index))
+
+    def write_region(self, index: Tuple[slice, ...], values) -> None:
+        """Array-index-space write.  Runtime-internal: executor downloads
+        land home without a version bump (the device copy was the truth)."""
+        self._store.write(tuple(index), values)
+
+    def read_rows(self, dim: int, lo: int, hi: int) -> np.ndarray:
+        """Rows ``[lo, hi)`` (grid coords) along ``dim``, full other dims —
+        the staging-slab shape the out-of-core executor moves."""
+        return self._store.read(self._rows_index(dim, lo, hi))
+
+    def write_rows(self, dim: int, lo: int, hi: int, values) -> None:
+        self._store.write(self._rows_index(dim, lo, hi), values)
+
+    def prefetch_rows(self, dim: int, lo: int, hi: int) -> int:
+        """Disk→host fetch of rows ``[lo, hi)`` (FetchHome's data plane);
+        returns disk bytes read (0 for RAM-resident stores)."""
+        return self._store.prefetch(self._rows_index(dim, lo, hi))
+
+    def spill_rows(self, dim: int, lo: int, hi: int) -> int:
+        """Host→disk retirement of rows ``[lo, hi)`` (SpillHome's data
+        plane); returns disk bytes written (0 for RAM-resident stores)."""
+        return self._store.spill(self._rows_index(dim, lo, hi))
 
     def interior(self) -> np.ndarray:
         """Interior view (no halos) — the usual thing users fetch."""
@@ -94,15 +197,21 @@ def make_dataset(
     halo: int | Tuple[Tuple[int, int], ...] = 1,
     dtype=np.float32,
     init: Optional[np.ndarray] = None,
+    store: Union[None, str, StoreConfig, BackingStore] = None,
 ) -> Dataset:
-    """Convenience constructor; scalar halo means the same pad on every face."""
+    """Convenience constructor; scalar halo means the same pad on every face.
+
+    ``store`` selects the home tier: ``None``/``"ram"`` (default), ``"mmap"``,
+    ``"chunked"``, a :class:`~repro.core.store.StoreConfig`, or a ready
+    :class:`~repro.core.store.BackingStore`."""
     if isinstance(halo, int):
         halo = tuple((halo, halo) for _ in range(block.ndim))
-    dat = Dataset(block=block, name=name, dtype=np.dtype(dtype), halo=halo)
+    dat = Dataset(block=block, name=name, dtype=np.dtype(dtype), halo=halo,
+                  store=store)
     if init is not None:
         init = np.asarray(init, dtype=dat.dtype)
         if init.shape == dat.padded_shape:
-            dat.data[...] = init
+            dat.write_region(tuple(slice(None) for _ in range(dat.ndim)), init)
         elif init.shape == block.size:
             dat.write(block.full_range(), init)
         else:

@@ -65,10 +65,19 @@ class OOCConfig:
     transfer: str = "sync"                   # "sync" | "threaded"
     codec: Union[str, Dict[str, str]] = "identity"   # name or {dat: name, "*": ...}
     pinned: Tuple[str, ...] = ()             # datasets kept device-resident
+    # -- host tier (repro.core.store) ----------------------------------------
+    # Host-RAM budget for dataset home copies; chains whose working set
+    # exceeds it get FetchHome/SpillHome ops against the disk-backed stores.
+    host_capacity: Optional[float] = None    # default: hw.host_capacity
 
     @property
     def capacity(self) -> float:
         return self.capacity_bytes if self.capacity_bytes is not None else self.hw.fast_capacity
+
+    @property
+    def host_budget(self) -> float:
+        return (self.host_capacity if self.host_capacity is not None
+                else self.hw.host_capacity)
 
     def codec_key(self) -> Tuple:
         """Hashable form of the codec spec (plan wire bytes depend on it)."""
@@ -102,6 +111,12 @@ class ChainStats:
     # (uploads/downloads/carries/elisions/evictions/...), so benchmarks
     # report plan structure without re-deriving it from ledger events.
     op_counts: Dict[str, int] = field(default_factory=dict)
+    # -- disk tier (repro.core.store) ----------------------------------------
+    # Bytes that crossed the disk boundary this chain: the backing stores'
+    # achieved counters on data-plane runs (all traffic, including lazy
+    # chunk-cache misses), the FetchHome/SpillHome modelled bytes in sim mode.
+    disk_read: int = 0
+    disk_written: int = 0
 
 
 @dataclass
@@ -165,7 +180,7 @@ class OutOfCoreExecutor:
         ``run_chain`` can split."""
         cfg = self.cfg
         key = (plan_signature(loops, cfg.tiled_dim), cfg.num_tiles,
-               cfg.num_slots, float(cfg.capacity),
+               cfg.num_slots, float(cfg.capacity), float(cfg.host_budget),
                tuple(sorted(cfg.pinned)), bool(cfg.cyclic),
                bool(cfg.prefetch), cfg.codec_key(), cfg.flops_per_point,
                tuple(sorted(keep_live)))
@@ -186,9 +201,14 @@ class OutOfCoreExecutor:
             sched = make_tile_schedule(info, n_tiles)
             slot_bytes = sched.slot_bytes(exclude=pinned_names)
             pinned_bytes = sum(info.datasets[n].nbytes for n in pinned_names)
-            # Single capacity oracle: the same accounting the real path uses
-            # decides whether run_chain must split (raises MemoryError).
+            # Single capacity oracle for BOTH tiers: fast-memory overflow
+            # raises (run_chain answers by splitting); host-RAM overflow is
+            # a planning verdict — the chain's home working set spills to
+            # the disk tier via FetchHome/SpillHome ops instead of dying.
+            home_bytes = sum(d.nbytes for d in info.datasets.values())
             self.residency.check_fit(slot_bytes, pinned_bytes)
+            spill_home = self.residency.host_overflow(home_bytes,
+                                                      cfg.host_budget)
         except MemoryError:
             if len(self._no_fit) >= 8 * self._max_plans:
                 self._no_fit.clear()
@@ -196,7 +216,8 @@ class OutOfCoreExecutor:
             raise
         ir = build_plan(
             info, sched, num_slots=cfg.num_slots, cyclic=cfg.cyclic,
-            prefetch=cfg.prefetch, keep_live=frozenset(keep_live),
+            prefetch=cfg.prefetch, spill_home=spill_home,
+            keep_live=frozenset(keep_live),
             pinned_names=pinned_names, codec_spec=cfg.codec,
             flops_per_point=cfg.flops_per_point, slot_bytes=slot_bytes,
             pinned_bytes=pinned_bytes,
@@ -229,6 +250,15 @@ class OutOfCoreExecutor:
         daemons), but long-lived processes creating many executors should
         call it — or rely on this running at garbage collection."""
         self.transfer.close()
+
+    def reset_data_caches(self) -> None:
+        """Forget device-side cached *data* (pinned arrays, speculative
+        prefetch captures) after home copies changed underneath the executor
+        — ``Session.restore`` calls this so a resumed run cannot replay
+        device state from before the checkpoint.  Plan caches survive: plans
+        are data-independent."""
+        self.residency._pinned_cache.clear()
+        self._spec = SpecState()
 
     def __del__(self):  # pragma: no cover - interpreter-shutdown timing
         try:
@@ -298,6 +328,13 @@ class OutOfCoreExecutor:
                 f"{cp.ir.num_slots}, dim {cp.ir.tiled_dim})")
         tx = self.transfer
         tx_before = tx.snapshot()
+        # Disk-tier accounting: on data-plane runs the backing stores count
+        # every byte that actually crossed the disk boundary (FetchHome /
+        # SpillHome traffic AND lazy chunk-cache misses inside staging tasks).
+        stores = {id(d.store): d.store for d in cp.info.datasets.values()}
+        disk_before = {
+            k: (s.stats["disk_bytes_read"], s.stats["disk_bytes_written"])
+            for k, s in stores.items()}
         if cfg.simulate_only:
             interp = LedgerInterpreter(
                 ir, cfg.hw, rm=self.residency, spec=self._spec,
@@ -310,6 +347,15 @@ class OutOfCoreExecutor:
         tx_delta = tx.delta(tx.snapshot(), tx_before)
         raw_total = res.uploaded + res.downloaded
         wire_total = res.uploaded_wire + res.downloaded_wire
+        if cfg.simulate_only:
+            disk_read, disk_written = res.disk_read, res.disk_written
+        else:
+            disk_read = sum(
+                s.stats["disk_bytes_read"] - disk_before[k][0]
+                for k, s in stores.items())
+            disk_written = sum(
+                s.stats["disk_bytes_written"] - disk_before[k][1]
+                for k, s in stores.items())
         self.history.append(
             ChainStats(
                 num_tiles=ir.num_tiles,
@@ -332,6 +378,8 @@ class OutOfCoreExecutor:
                 queue_wait_s=tx_delta.get("queue_wait_s", 0.0),
                 transfer_mode=tx.mode,
                 op_counts=ir.counts(),
+                disk_read=disk_read,
+                disk_written=disk_written,
             )
         )
         return res.reductions
@@ -366,6 +414,9 @@ class OutOfCoreExecutor:
             "elided_rows": rs["elided_rows"],
             "evictions": rs["evictions"],
             "pinned_hits": rs["pinned_hits"],
+            # disk tier (repro.core.store): bytes across the disk boundary
+            "bytes_disk_read": sum(c.disk_read for c in self.history),
+            "bytes_disk_written": sum(c.disk_written for c in self.history),
         }
 
 

@@ -32,15 +32,17 @@ from .plan import (
     Download,
     Elide,
     Evict,
+    FetchHome,
     PinUpload,
     Plan,
     Prefetch,
+    SpillHome,
     Upload,
     WritebackPinned,
 )
 from .tiling import Interval
 from .transfer import ResidencyManager
-from .transfer.engine import DOWN, UP
+from .transfer.engine import DISK, DOWN, UP
 
 
 class _SimArray:
@@ -80,6 +82,10 @@ class InterpResult:
     edge_bytes: int
     prefetch_hits: int
     ledger: TransferLedger
+    # Disk tier (FetchHome/SpillHome): modelled raw bytes in sim mode; the
+    # executor replaces them with the stores' achieved counters on real runs.
+    disk_read: int = 0
+    disk_written: int = 0
 
 
 class LedgerInterpreter:
@@ -109,14 +115,17 @@ class LedgerInterpreter:
         self.uploaded_wire = self.downloaded_wire = 0
         self.edge_bytes = 0
         self.prefetch_hits = 0
+        self.disk_read = self.disk_written = 0
         self.reductions: Dict[str, np.ndarray] = {}
-        # event-id cursors (the three-stream dependency wiring)
+        # event-id cursors (the four-stream dependency wiring)
         self.last_upload_eid: Optional[int] = None
         self.last_compute_eid: Optional[int] = None
         self.last_download_eid: Dict[int, Optional[int]] = {}
         self.tile_up_eid: Dict[int, int] = {}
         self.compute_eids: Dict[int, int] = {}
         self.tile_slot: Dict[int, Any] = {}
+        self.fetch_eids: Dict[int, int] = {}       # tile -> FetchHome event
+        self.tile_down_eid: Dict[int, int] = {}    # tile -> Download event
 
     # -- byte math over plan annotations --------------------------------------
     def _nbytes(self, name: str, lo: int, hi: int) -> int:
@@ -136,6 +145,8 @@ class LedgerInterpreter:
         Evict.kind: "op_evict",
         Prefetch.kind: "op_prefetch",
         WritebackPinned.kind: "op_pin_flush",
+        FetchHome.kind: "op_fetch_home",
+        SpillHome.kind: "op_spill_home",
     }
 
     def run(self) -> InterpResult:
@@ -160,6 +171,7 @@ class LedgerInterpreter:
             downloaded_wire=self.downloaded_wire,
             edge_bytes=self.edge_bytes, prefetch_hits=self.prefetch_hits,
             ledger=self.ledger,
+            disk_read=self.disk_read, disk_written=self.disk_written,
         )
 
     # -- lifecycle hooks (data plane overrides) -------------------------------
@@ -194,6 +206,33 @@ class LedgerInterpreter:
         origin = -dat.halo[self.plan.tiled_dim][0]
         self.rm.pinned_store(dat, _SimArray(dat.nbytes), origin)
         return nb, self._wire(name, nb)
+
+    # -- the disk tier (tiered host storage) ----------------------------------
+    def op_fetch_home(self, op: FetchHome) -> None:
+        """Disk -> host fetch of tile ``op.tile``'s staging rows: stream-3
+        FIFO (positional), no cross-stream deps — the upload that *reads*
+        these rows carries the dependency instead."""
+        self.disk_read += op.raw
+        eid = self.stage_fetch_home(op)
+        if eid is not None:
+            self.fetch_eids[op.tile] = eid
+
+    def stage_fetch_home(self, op: FetchHome) -> Optional[int]:
+        return self.ledger.add(3, "fetch_home", op.raw,
+                               self.ledger.t_disk(op.raw), ())
+
+    def op_spill_home(self, op: SpillHome) -> None:
+        """Host -> disk retirement: waits for tile ``op.tile``'s download to
+        land the rows home, then pushes them out on stream 3."""
+        deps = ()
+        if self.tile_down_eid.get(op.tile) is not None:
+            deps = (self.tile_down_eid[op.tile],)
+        self.disk_written += op.raw
+        self.stage_spill_home(op, deps)
+
+    def stage_spill_home(self, op: SpillHome, deps) -> Optional[int]:
+        return self.ledger.add(3, "spill_home", op.raw,
+                               self.ledger.t_disk(op.raw), deps)
 
     # -- staging --------------------------------------------------------------
     def spec_lookup(self, name: str, iv: Interval):
@@ -234,6 +273,8 @@ class LedgerInterpreter:
             up_deps.append(self.last_download_eid[slot.index])  # reuse fence
         if self.last_upload_eid is not None:
             up_deps.append(self.last_upload_eid)                # stream-1 FIFO
+        if self.fetch_eids.get(op.tile) is not None:
+            up_deps.append(self.fetch_eids[op.tile])  # rows must be in RAM
         eid = self.stage_upload(op, slot, org, items, restores, raw,
                                 tuple(up_deps))
         if eid is not None:
@@ -302,6 +343,7 @@ class LedgerInterpreter:
         self.downloaded += op.raw
         eid = self.stage_download(op, slot, deps)
         self.last_download_eid[slot.index] = eid
+        self.tile_down_eid[op.tile] = eid
 
     def stage_download(self, op: Download, slot, deps) -> int:
         wire = sum(self._wire(name, self._nbytes(name, lo, hi))
@@ -387,24 +429,20 @@ class DataPlaneInterpreter(LedgerInterpreter):
         self.td = plan.tiled_dim
         self.patches: List[Tuple[int, Any, str]] = []
         self.up_handles: Dict[int, Any] = {}
+        self.fetch_handles: Dict[int, Any] = {}   # tile -> disk-fetch handle
+        self.down_handles: Dict[int, Any] = {}    # tile -> download handle
         self.pinned_arrays: Dict[str, Any] = {}
         self.pinned_origins: Dict[str, int] = {}
         self.red_specs = {r.name: r for lp in cp.info.loops
                           for r in lp.reductions}
         self._prefetch_armed = False
 
-    # -- numpy/jax region helpers --------------------------------------------
+    # -- home region helpers (store-routed: ram, mmap and chunked homes) -----
     def _dat_np_region(self, dat, iv: Interval) -> np.ndarray:
-        h = dat.halo[self.td][0]
-        idx = [slice(None)] * dat.ndim
-        idx[self.td] = slice(iv.lo + h, iv.hi + h)
-        return dat.data[tuple(idx)]
+        return dat.read_rows(self.td, iv.lo, iv.hi)
 
     def _write_np_region(self, dat, iv: Interval, values: np.ndarray) -> None:
-        h = dat.halo[self.td][0]
-        idx = [slice(None)] * dat.ndim
-        idx[self.td] = slice(iv.lo + h, iv.hi + h)
-        dat.data[tuple(idx)] = values
+        dat.write_rows(self.td, iv.lo, iv.hi, values)
 
     @staticmethod
     def _slot_slice(arr, lo: int, hi: int, td: int):
@@ -446,12 +484,14 @@ class DataPlaneInterpreter(LedgerInterpreter):
             ledger.totals[ev.kind] = (
                 ledger.totals.get(ev.kind, 0) + wire - ev.nbytes)
             ev.nbytes = wire
-            ev.duration = (ledger.t_up(wire) if direction == UP
-                           else ledger.t_down(wire))
             if direction == UP:
+                ev.duration = ledger.t_up(wire)
                 self.uploaded_wire += wire
-            else:
+            elif direction == DOWN:
+                ev.duration = ledger.t_down(wire)
                 self.downloaded_wire += wire
+            else:   # DISK: achieved payload bytes (chunk-cache hits cost 0)
+                ev.duration = ledger.t_disk(wire)
         # Speculative-prefetch data capture: home is stable now that
         # downloads have drained, so snapshot the regions the next chain's
         # first tile is assumed to upload.  ``jnp.array`` copies — the
@@ -479,12 +519,58 @@ class DataPlaneInterpreter(LedgerInterpreter):
             self.pinned_arrays[name] = arr
             self.pinned_origins[name] = origin
             return 0, 0
-        dec, raw, wire = self.codecs[name].roundtrip(dat.data)
+        dec, raw, wire = self.codecs[name].roundtrip(dat.materialize())
         arr = jnp.asarray(np.asarray(dec, dtype=dat.dtype))
         self.rm.pinned_store(dat, arr, origin)
         self.pinned_arrays[name] = arr
         self.pinned_origins[name] = origin
         return raw, wire
+
+    # -- the disk tier (real store traffic on the third worker lane) ----------
+    def stage_fetch_home(self, op: FetchHome) -> Optional[int]:
+        """Disk -> host fetch of tile ``op.tile``'s rows on the DISK lane:
+        decompresses the backing store's chunks into its cache (a no-op for
+        RAM-resident stores) so the upload worker's staging read is a pure
+        RAM hit.  The upload waits on this handle, not the other way round."""
+        td = self.td
+        datasets = self.info.datasets
+        items = [(datasets[name], Interval(lo, hi))
+                 for name, lo, hi in op.items]
+
+        def task():
+            read = 0
+            for dat, iv in items:
+                read += dat.prefetch_rows(td, iv.lo, iv.hi)
+            return op.raw, read
+
+        handle = self.tx.submit(DISK, task)
+        self.fetch_handles[op.tile] = handle
+        eid = self.ledger.add(3, "fetch_home", op.raw,
+                              self.ledger.t_disk(op.raw), ())
+        self.patches.append((eid, handle, DISK))
+        return eid
+
+    def stage_spill_home(self, op: SpillHome, deps) -> Optional[int]:
+        """Host -> disk retirement on the DISK lane, gated on the download
+        task that lands the rows home (handle dep, mirroring the ledger
+        event's dep on the download event)."""
+        td = self.td
+        datasets = self.info.datasets
+        items = [(datasets[name], Interval(lo, hi))
+                 for name, lo, hi in op.items]
+        dh = self.down_handles.get(op.tile)
+
+        def task():
+            written = 0
+            for dat, iv in items:
+                written += dat.spill_rows(td, iv.lo, iv.hi)
+            return op.raw, written
+
+        handle = self.tx.submit(DISK, task, deps=[dh] if dh is not None else [])
+        eid = self.ledger.add(3, "spill_home", op.raw,
+                              self.ledger.t_disk(op.raw), deps)
+        self.patches.append((eid, handle, DISK))
+        return eid
 
     # -- staging --------------------------------------------------------------
     def spec_lookup(self, name: str, iv: Interval):
@@ -555,6 +641,9 @@ class DataPlaneInterpreter(LedgerInterpreter):
         conflicts = [
             h for name, iv in items
             for h in self.rm.home_conflicts(name, iv.lo, iv.hi)]
+        fh = self.fetch_handles.get(op.tile)
+        if fh is not None:      # disk tier: rows must be host-resident first
+            conflicts.append(fh)
         handle = self.tx.submit(
             UP, self._make_upload_task(slot, org, items, restores),
             deps=conflicts)
@@ -643,6 +732,7 @@ class DataPlaneInterpreter(LedgerInterpreter):
         handle = self.tx.submit(
             DOWN, self._make_download_task(dict(slot.arrays), org, items),
             deps=read_deps)
+        self.down_handles[op.tile] = handle
         eid = self.ledger.add(2, "download", op.raw,
                               self.ledger.t_down(op.raw), deps)
         self.patches.append((eid, handle, DOWN))

@@ -31,6 +31,11 @@ class HardwareModel:
     flops: float = 1e12
     page_bytes: int = 2 << 20   # UM/cache page granularity
     page_fault_latency: float = 50e-6  # per-page miss service latency (UM)
+    # -- host tier (the HostModel): how much slow memory there is, and how
+    # fast the disk tier behind it moves when home copies spill past it.
+    host_capacity: float = float("inf")  # host-RAM size (bytes)
+    disk_bw: float = 2e9                 # spill-store streaming bandwidth
+    disk_latency: float = 100e-6         # per-op service latency (seek/queue)
 
     def with_(self, **kw) -> "HardwareModel":
         return replace(self, **kw)
@@ -76,8 +81,9 @@ PRESETS = {m.name: m for m in (KNL_7210, P100_PCIE, P100_NVLINK, TPU_V5E)}
 @dataclass
 class Event:
     eid: int
-    stream: int            # 0 = compute/edge, 1 = upload, 2 = download
+    stream: int            # 0 = compute/edge, 1 = upload, 2 = download, 3 = disk
     kind: str              # upload | download | edge | compute | prefetch
+    #                        | fetch_home | spill_home
     nbytes: int
     duration: float
     deps: Tuple[int, ...] = ()
@@ -109,6 +115,9 @@ class TransferLedger:
 
     def t_dd(self, nbytes: int) -> float:
         return nbytes / self.hw.dd_bw if nbytes else 0.0
+
+    def t_disk(self, nbytes: int) -> float:
+        return self.hw.disk_latency + nbytes / self.hw.disk_bw if nbytes else 0.0
 
     def t_compute(self, nbytes: int, flops: int) -> float:
         return max(nbytes / self.hw.fast_bw, flops / self.hw.flops)

@@ -55,6 +55,39 @@ class PlanOp:
 
 
 @dataclass(frozen=True)
+class FetchHome(PlanOp):
+    """Disk -> host-RAM fetch of tile ``tile``'s staging rows (stream 3).
+
+    Emitted when the HostModel says the chain's home working set exceeds
+    host RAM: the rows tile ``tile``'s upload will read must be RAM-resident
+    (decompressed into the chunk cache / paged in) before the upload worker
+    touches them.  Scheduled two tiles ahead by construction — the op sits in
+    the stream where tile ``tile``'s staged upload is submitted, so on a
+    ≥2-slot pool the disk lane runs ahead of the host->device lane exactly
+    like the host->device lane runs ahead of compute."""
+
+    kind: ClassVar[str] = "fetch-home"
+    tile: int
+    items: Tuple[Item, ...]
+    raw: int
+
+
+@dataclass(frozen=True)
+class SpillHome(PlanOp):
+    """Host-RAM -> disk retirement of tile ``tile``'s downloaded rows.
+
+    The mirror of :class:`FetchHome`: once the download has landed the rows
+    home, they are pushed out to the backing store (dirty chunks compressed
+    and written, fully-retired chunks dropped from the cache) so the host
+    working set stays inside the budget."""
+
+    kind: ClassVar[str] = "spill-home"
+    tile: int
+    items: Tuple[Item, ...]
+    raw: int
+
+
+@dataclass(frozen=True)
 class PinUpload(PlanOp):
     """Ensure pinned datasets are device-resident (upload on a cache miss).
 
@@ -175,14 +208,15 @@ class WritebackPinned(PlanOp):
 OP_TYPES: Dict[str, type] = {
     cls.kind: cls
     for cls in (PinUpload, Upload, Compute, CarryEdge, Elide, Download,
-                Evict, Prefetch, WritebackPinned)
+                Evict, Prefetch, WritebackPinned, FetchHome, SpillHome)
 }
 
 
 # -- the plan ---------------------------------------------------------------------
 
 
-PLAN_JSON_VERSION = 1
+# v2: + ``spill_home`` plan flag and the FetchHome/SpillHome disk-tier ops.
+PLAN_JSON_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -199,6 +233,7 @@ class Plan:
     early_submit: bool
     cyclic: bool
     prefetch: bool
+    spill_home: bool            # host tier oversubscribed: disk ops emitted
     slot_bytes: int
     pinned_bytes: int
     loop_bytes: int
@@ -215,7 +250,8 @@ class Plan:
         """Per-kind op counts (uploads count only item-bearing staging ops)."""
         c = {"uploads": 0, "downloads": 0, "computes": 0, "carries": 0,
              "elisions": 0, "evictions": 0, "prefetches": 0,
-             "pin_uploads": 0, "pin_writebacks": 0}
+             "pin_uploads": 0, "pin_writebacks": 0,
+             "home_fetches": 0, "home_spills": 0}
         for op in self.ops:
             if isinstance(op, Upload):
                 if op.items:
@@ -236,11 +272,16 @@ class Plan:
                 c["pin_uploads"] += 1
             elif isinstance(op, WritebackPinned):
                 c["pin_writebacks"] += 1
+            elif isinstance(op, FetchHome):
+                c["home_fetches"] += 1
+            elif isinstance(op, SpillHome):
+                c["home_spills"] += 1
         return c
 
     def totals(self) -> Dict[str, int]:
         """Modelled byte totals (cold caches, no prefetch hits)."""
         up_raw = up_wire = dn_raw = dn_wire = edge = flops = 0
+        disk_read = disk_written = 0
         for op in self.ops:
             if isinstance(op, (Upload, PinUpload)):
                 up_raw += op.raw
@@ -252,9 +293,14 @@ class Plan:
                 edge += op.nbytes
             elif isinstance(op, Compute):
                 flops += op.flops
+            elif isinstance(op, FetchHome):
+                disk_read += op.raw
+            elif isinstance(op, SpillHome):
+                disk_written += op.raw
         return {"uploaded": up_raw, "uploaded_wire": up_wire,
                 "downloaded": dn_raw, "downloaded_wire": dn_wire,
-                "edge_bytes": edge, "flops": flops}
+                "edge_bytes": edge, "flops": flops,
+                "disk_read": disk_read, "disk_written": disk_written}
 
     # -- JSON -----------------------------------------------------------------
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -318,6 +364,7 @@ def build_plan(
     num_slots: int,
     cyclic: bool = False,
     prefetch: bool = False,
+    spill_home: bool = False,
     keep_live: FrozenSet[str] = frozenset(),
     pinned_names: FrozenSet[str] = frozenset(),
     codec_spec=None,
@@ -331,7 +378,14 @@ def build_plan(
     schedule (``sched``) plus the planning-relevant config knobs; touches no
     data.  Op order is the three-stream submission order of Algorithm 1 —
     with ≥2 slots tile t+1's upload is issued before tile t's compute
-    (pipelined staging); a 1-slot pool runs strictly in order."""
+    (pipelined staging); a 1-slot pool runs strictly in order.
+
+    ``spill_home`` (the HostModel's verdict that home copies oversubscribe
+    host RAM) adds the fourth stream: every staged upload is preceded by a
+    ``FetchHome`` of the same rows (disk -> host ahead of host -> device) and
+    every download is followed by a ``SpillHome`` (host -> disk once the rows
+    are retired).  Pinned datasets are exempt — pinning declares them small
+    and hot, i.e. host-resident for the whole run."""
     td = info.tiled_dim
     num_tiles = sched.num_tiles
     early_submit = num_slots >= 2
@@ -471,9 +525,20 @@ def build_plan(
 
     def staged_upload(t: int) -> List[PlanOp]:
         out: List[PlanOp] = []
+        up = upload_op(t)
+        if spill_home and up.items:
+            out.append(FetchHome(tile=t, items=up.items, raw=up.raw))
         if t >= num_slots:
             out.append(Evict(tile=t, slot=t % num_slots))
-        out.append(upload_op(t))
+        out.append(up)
+        return out
+
+    def retire_tail(t: int, dl: Optional[Download]) -> List[PlanOp]:
+        if dl is None:
+            return []
+        out: List[PlanOp] = [dl]
+        if spill_home:
+            out.append(SpillHome(tile=t, items=dl.items, raw=dl.raw))
         return out
 
     # -- assembly: Algorithm 1's submission order -----------------------------
@@ -489,13 +554,11 @@ def build_plan(
                 ops.append(c)
             if el:
                 ops.append(el)
-            if dl:
-                ops.append(dl)
+            ops.extend(retire_tail(t, dl))
         else:
             if el:
                 ops.append(el)
-            if dl:
-                ops.append(dl)
+            ops.extend(retire_tail(t, dl))
             c = carry_op(t)
             if c:
                 ops.append(c)
@@ -532,7 +595,8 @@ def build_plan(
     return Plan(
         num_tiles=num_tiles, num_slots=num_slots, tiled_dim=td,
         early_submit=early_submit, cyclic=bool(cyclic),
-        prefetch=bool(prefetch), slot_bytes=int(slot_bytes),
+        prefetch=bool(prefetch), spill_home=bool(spill_home),
+        slot_bytes=int(slot_bytes),
         pinned_bytes=int(pinned_bytes), loop_bytes=info.loop_bytes(),
         sig_hash=chain_sig_hash(info),
         row_bytes=tuple(sorted(row_bytes.items())),
@@ -577,7 +641,8 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
         + (f", pinned {_mb(plan.pinned_bytes)}" if plan.pinned_bytes else "")
         + f", codec {'/'.join(codec_set)}"
         + (", cyclic" if plan.cyclic else "")
-        + (", prefetch" if plan.prefetch else ""),
+        + (", prefetch" if plan.prefetch else "")
+        + (", disk tier (host oversubscribed)" if plan.spill_home else ""),
     ]
     cur_tile = None
     for op in plan.ops:
@@ -606,6 +671,12 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
         elif isinstance(op, Download):
             lines.append(f"    download {_items_str(op.items)}"
                          f"  {_mb(op.raw)} (wire {_mb(op.wire)})")
+        elif isinstance(op, FetchHome):
+            lines.append(f"    fetch-home  {_items_str(op.items)}"
+                         f"  {_mb(op.raw)} (disk -> host)")
+        elif isinstance(op, SpillHome):
+            lines.append(f"    spill-home  {_items_str(op.items)}"
+                         f"  {_mb(op.raw)} (host -> disk)")
         elif isinstance(op, Evict):
             lines.append(f"    evict    slot {op.slot}")
         elif isinstance(op, Prefetch):
@@ -619,7 +690,9 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
     lines.append(
         f"  totals: up {_mb(tot['uploaded'])} (wire {_mb(tot['uploaded_wire'])}),"
         f" down {_mb(tot['downloaded'])} (wire {_mb(tot['downloaded_wire'])}),"
-        f" edge {_mb(tot['edge_bytes'])}")
+        f" edge {_mb(tot['edge_bytes'])}"
+        + (f", disk r/w {_mb(tot['disk_read'])}/{_mb(tot['disk_written'])}"
+           if plan.spill_home else ""))
     lines.append(
         "  ops: " + ", ".join(f"{v} {k}" for k, v in plan.counts().items() if v))
     if hw is not None:

@@ -70,6 +70,10 @@ class ExecutionConfig:
     transfer: str = "sync"                   # "sync" | "threaded" workers
     codec: Union[str, Dict[str, str]] = "identity"   # per-dat: {"dat": name, "*": ...}
     pinned: Tuple[str, ...] = ()             # datasets kept device-resident
+    # -- host tier (repro.core.store) -----------------------------------------
+    # Host-RAM budget for dataset home copies; chains whose working set
+    # exceeds it plan FetchHome/SpillHome ops against the disk-backed stores.
+    host_capacity: Optional[float] = None    # default: hw.host_capacity
 
     def __post_init__(self) -> None:
         if isinstance(self.hw, str):
@@ -91,6 +95,7 @@ class ExecutionConfig:
             simulate_only=self.simulate_only,
             transfer=self.transfer, codec=self.codec,
             pinned=tuple(self.pinned),
+            host_capacity=self.host_capacity,
         )
         kw.update(overrides)
         return OOCConfig(**kw)
@@ -358,6 +363,9 @@ class Session:
         self.queue: List[ParallelLoop] = []
         self._red_results: Dict[str, np.ndarray] = {}
         self.chains_flushed = 0
+        # Every dataset any recorded loop has touched, by name — what
+        # checkpoint()/restore() cover when no explicit list is given.
+        self.datasets: Dict[str, Dataset] = {}
         # LRU-bounded like the executor's plan cache: kernels capturing a
         # per-step constant mint a new fingerprint every step.
         self._arg_cache: "OrderedDict[Tuple, Tuple[Arg, ...]]" = OrderedDict()
@@ -424,6 +432,8 @@ class Session:
             name=name, block=block, range_=range_t, args=all_args,
             kernel=kernel, reductions=tuple(reductions),
         )
+        for a in all_args:
+            self.datasets[a.dat.name] = a.dat
         if kernel_fp is not None:
             lp.__dict__["_kernel_fp"] = kernel_fp  # reused by plan_signature
         self.queue.append(lp)
@@ -496,7 +506,7 @@ class Session:
 
     def fetch_raw(self, dat: Dataset) -> np.ndarray:
         self.flush()
-        return dat.data.copy()
+        return np.array(dat.materialize(), copy=True)
 
     def reduction(self, name: str) -> np.ndarray:
         """Flush and return reduction ``name``.  Results are *retained* until
@@ -596,6 +606,52 @@ class Session:
             self.executor = self.backend
         return result
 
+    # -- checkpoint / restart -----------------------------------------------------
+    def checkpoint(self, path: str, datasets=None) -> Dict:
+        """Write a restartable snapshot to ``path`` (atomic write-then-rename).
+
+        Flushes pending loops first, then captures every dataset this session
+        has seen (or the explicit ``datasets``) — materialised home copies,
+        versions — plus the plan-cache signature hashes for provenance.  A
+        multi-hour out-of-core run killed after this call resumes
+        bit-identically via :meth:`restore`.  Returns the manifest.
+
+        App-level *scalars* (a CFL ``dt``, a step counter steering sweep
+        direction) live outside the runtime; persist and restore those
+        alongside the checkpoint yourself."""
+        from .store import save_checkpoint
+
+        self.flush()
+        dats = list(datasets) if datasets is not None else list(
+            self.datasets.values())
+        plans = getattr(self.backend, "_plans", {})
+        sigs = [cp.ir.sig_hash for cp in plans.values()
+                if getattr(cp, "ir", None) is not None]
+        return save_checkpoint(path, dats,
+                               chains_flushed=self.chains_flushed,
+                               plan_signatures=sigs)
+
+    def restore(self, path: str, datasets=None) -> Dict:
+        """Load a :meth:`checkpoint` back into live datasets (matched by
+        name; shapes/dtypes validated) and reset device-side data caches so
+        nothing stale survives from before the snapshot.  In a fresh process
+        the session has not seen any loops yet — pass the new app's datasets
+        explicitly.  Pending queued loops are dropped (they reference
+        pre-restore state).  Returns the manifest."""
+        from .store import load_checkpoint
+
+        dats = list(datasets) if datasets is not None else list(
+            self.datasets.values())
+        manifest = load_checkpoint(path, dats)
+        for d in dats:
+            self.datasets[d.name] = d
+        self.queue.clear()
+        self._red_results.clear()
+        reset = getattr(self.backend, "reset_data_caches", None)
+        if reset is not None:
+            reset()
+        return manifest
+
     # -- introspection -----------------------------------------------------------
     @property
     def history(self):
@@ -634,6 +690,7 @@ class Session:
             "bytes_up_wire": 0, "bytes_down_wire": 0, "bytes_moved_wire": 0,
             "compression_ratio": 1.0, "queue_wait_s": 0.0,
             "elided_rows": 0, "evictions": 0, "pinned_hits": 0,
+            "bytes_disk_read": 0, "bytes_disk_written": 0,
         }
 
 

@@ -41,7 +41,8 @@ class _NumpyAccessor(Accessor):
                   lp.range_[d][1] + offset[d] + dat.halo[d][0])
             for d in range(nd)
         )
-        return dat.data[idx]
+        # Store-routed so the oracle also runs over mmap/chunked homes.
+        return dat.read_region(idx)
 
 
 def run_loop_reference(lp: ParallelLoop) -> Dict[str, np.ndarray]:
@@ -64,9 +65,9 @@ def run_loop_reference(lp: ParallelLoop) -> Dict[str, np.ndarray]:
             for d in range(lp.block.ndim)
         )
         if arg.mode is AccessMode.INC:
-            dat.data[idx] += vals
+            dat.write_region(idx, dat.read_region(idx) + vals)
         else:
-            dat.data[idx] = vals
+            dat.write_region(idx, vals)
     reds = {}
     for rspec in lp.reductions:
         reds[rspec.name] = np.asarray(out[rspec.name])

@@ -1,0 +1,233 @@
+"""Backing stores: where a dataset's slow-memory *home copy* actually lives.
+
+The paper breaks the fast-memory wall (device HBM); this subsystem breaks the
+next one.  A :class:`~repro.core.dataset.Dataset`'s home used to be a plain
+in-RAM NumPy array, so the runtime's memory hierarchy stopped one level short:
+problems larger than *host* RAM simply could not be represented.  Following
+the OPS run-time tiling line of work (host as just another cache level) and
+Shen et al.'s compression-based out-of-core GPU stencils (a compressed disk
+tier plus overlapped I/O keeps such runs transfer-bound rather than
+capacity-bound), a home copy is now an object behind one interface:
+
+==============  ===============================================================
+``ram``         the previous behaviour — a NumPy array, zero overhead (default)
+``mmap``        ``np.memmap`` over a file in a spill directory; tile rows are
+                read/written in place, the OS page cache is the host tier
+``chunked``     fixed-size row chunks compressed with the PR 2 codec registry
+                on disk, an LRU *decompressed-chunk* cache with a byte budget
+                in RAM, per-chunk dirty tracking
+==============  ===============================================================
+
+The store works in *array index* space (padded-array indices); grid-coordinate
+translation stays in :class:`~repro.core.dataset.Dataset`.  All stores are
+thread-safe where it matters: the transfer engine's upload, download and disk
+workers may touch one store concurrently.
+
+``stats`` counts disk traffic (``disk_bytes_read`` / ``disk_bytes_written``
+are the payload bytes that crossed the disk boundary — for ``mmap``, the
+bytes moved through the API, since the page cache makes true device I/O
+unobservable) plus chunk-cache behaviour for ``chunked``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import numpy as np
+
+Index = Tuple[slice, ...]
+
+
+class StoreError(RuntimeError):
+    """A backing-store operation is invalid (wrong shape, closed store, or an
+    operation the store kind cannot support, like ``.data`` on ``chunked``)."""
+
+
+class BackingStore:
+    """One dataset home copy: an n-d array of ``shape``/``dtype`` somewhere.
+
+    ``read`` may return a view (``ram``/``mmap``) or a fresh array
+    (``chunked``); callers must not rely on mutating the result.  ``write``
+    broadcasts ``values`` over the indexed region.  ``prefetch``/``spill``
+    are the disk-tier hooks the executor's FetchHome/SpillHome ops drive:
+    no-ops for RAM-resident stores, real traffic for ``chunked``.
+    """
+
+    kind: str = "?"
+
+    def __init__(self, shape: Tuple[int, ...], dtype):
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = np.dtype(dtype)
+        self.stats: Dict[str, int] = {
+            "disk_bytes_read": 0, "disk_bytes_written": 0,
+            "cache_hits": 0, "cache_misses": 0, "chunk_evictions": 0,
+        }
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nbytes(self) -> int:
+        """Logical (uncompressed) size of the stored array."""
+        n = self.dtype.itemsize
+        for s in self.shape:
+            n *= s
+        return int(n)
+
+    def _full_index(self) -> Index:
+        return tuple(slice(0, s) for s in self.shape)
+
+    # -- data access ----------------------------------------------------------
+    def read(self, index: Index) -> np.ndarray:
+        raise NotImplementedError
+
+    def write(self, index: Index, values) -> None:
+        raise NotImplementedError
+
+    def as_array(self) -> np.ndarray:
+        """The live backing array, for stores that have one (``ram``/``mmap``).
+
+        Raises :class:`StoreError` otherwise — code that must work with every
+        store kind uses ``read``/``write``/``materialize`` instead."""
+        raise StoreError(
+            f"{self.kind!r} store has no single in-RAM backing array; "
+            f"use read()/write()/materialize()")
+
+    def materialize(self) -> np.ndarray:
+        """The whole array (a view for RAM-resident stores, assembled fresh
+        for ``chunked``) — what checkpointing and ``fetch_raw`` consume."""
+        return np.asarray(self.read(self._full_index()))
+
+    # -- disk-tier hooks ------------------------------------------------------
+    def prefetch(self, index: Index) -> int:
+        """Make the indexed region RAM-resident; returns disk bytes read."""
+        return 0
+
+    def spill(self, index: Index) -> int:
+        """Push the indexed region's dirty state to disk (and release RAM
+        where the store can); returns disk bytes written."""
+        return 0
+
+    def flush(self) -> int:
+        """Persist everything dirty; returns disk bytes written."""
+        return 0
+
+    def close(self) -> None:
+        """Flush and release resources; the store is unusable afterwards."""
+        self.flush()
+
+
+class RamStore(BackingStore):
+    """Today's behaviour: the home copy is a plain NumPy array.
+
+    Wraps the given array *without copying* so existing code holding the
+    array (e.g. via ``Dataset.data``) keeps seeing every update."""
+
+    kind = "ram"
+
+    def __init__(self, array: np.ndarray):
+        array = np.asarray(array)
+        super().__init__(array.shape, array.dtype)
+        self._arr = array
+
+    def read(self, index: Index) -> np.ndarray:
+        return self._arr[index]
+
+    def write(self, index: Index, values) -> None:
+        self._arr[index] = values
+
+    def as_array(self) -> np.ndarray:
+        return self._arr
+
+    def materialize(self) -> np.ndarray:
+        return self._arr
+
+
+# -- configuration + registry -----------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StoreConfig:
+    """Declarative store selection for :func:`make_store` /
+    ``make_dataset(store=...)``.
+
+    ``directory`` is the spill directory for disk-backed kinds; when ``None``
+    a fresh ``tempfile.mkdtemp`` directory is created per dataset (see the
+    README's spill-dir hygiene notes — temp spill dirs are *not* auto-deleted
+    so ``mmap`` homes survive reopen).  ``codec`` names a codec from the
+    :mod:`repro.core.transfer.codecs` registry; the ``chunked`` default is the
+    lossless ``shuffle-rle`` (lossy codecs silently degrade the *home copy*,
+    not just the wire — opt in knowingly).  ``mode`` is ``"w+"`` (create) or
+    ``"r+"`` (reopen existing ``mmap`` files in place).
+    """
+
+    kind: str = "ram"
+    directory: Optional[str] = None
+    chunk_bytes: int = 1 << 20          # chunked: target compressed-unit size
+    cache_bytes: int = 64 << 20         # chunked: decompressed-cache budget
+    codec: str = "shuffle-rle"          # chunked: at-rest compression
+    mode: str = "w+"                    # mmap: "w+" create | "r+" reopen
+
+    def resolved_directory(self, prefix: str) -> str:
+        if self.directory is not None:
+            os.makedirs(self.directory, exist_ok=True)
+            return self.directory
+        return tempfile.mkdtemp(prefix=f"repro-{prefix}-")
+
+
+StoreSpec = Union[None, str, StoreConfig, BackingStore]
+
+_STORES: Dict[str, Callable] = {}
+
+
+def register_store(kind: str):
+    """Decorator registering ``factory(config, name, shape, dtype,
+    data=None) -> store`` under ``kind`` (mirrors the backend/codec
+    registries).  ``data`` is the initial contents; a factory may adopt the
+    array in place (``ram`` does, preserving aliasing) or copy it in."""
+    def deco(factory):
+        _STORES[kind] = factory
+        return factory
+    return deco
+
+
+def available_stores() -> Tuple[str, ...]:
+    return tuple(sorted(_STORES))
+
+
+@register_store("ram")
+def _ram(config: StoreConfig, name: str, shape, dtype, data=None) -> RamStore:
+    # Wrap user data without copying: Dataset(data=arr) keeps aliasing arr.
+    return RamStore(data if data is not None
+                    else np.zeros(shape, dtype=dtype))
+
+
+def make_store(spec: StoreSpec, *, name: str, shape: Tuple[int, ...], dtype,
+               data: Optional[np.ndarray] = None) -> BackingStore:
+    """Materialise a backing store from a spec.
+
+    ``spec`` is ``None``/``"ram"`` (default), a kind name, a
+    :class:`StoreConfig`, or a ready :class:`BackingStore` (shape/dtype
+    checked).  ``data``, when given, becomes the initial contents.
+    """
+    if isinstance(spec, BackingStore):
+        if spec.shape != tuple(shape) or spec.dtype != np.dtype(dtype):
+            raise StoreError(
+                f"store for {name!r} has shape {spec.shape}/{spec.dtype}, "
+                f"dataset needs {tuple(shape)}/{np.dtype(dtype)}")
+        if data is not None:
+            spec.write(tuple(slice(None) for _ in shape), data)
+        return spec
+    if spec is None:
+        spec = StoreConfig()
+    elif isinstance(spec, str):
+        spec = StoreConfig(kind=spec)
+    factory = _STORES.get(spec.kind)
+    if factory is None:
+        raise StoreError(
+            f"unknown store kind {spec.kind!r}; "
+            f"available: {', '.join(available_stores())}")
+    return factory(spec, name, tuple(shape), np.dtype(dtype), data=data)

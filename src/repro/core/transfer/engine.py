@@ -27,10 +27,20 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 UP = "up"
 DOWN = "down"
+# The third lane (tiered host storage): disk<->host traffic — FetchHome
+# prefetches of tile t+2's home rows and SpillHome retirements — runs on its
+# own worker so it overlaps tile t+1's host->device upload AND tile t's
+# compute.  One queue serves both directions of disk I/O (a spinning or
+# queued-flash store serialises them anyway).
+DISK = "disk"
 
 
 class TransferError(RuntimeError):
     """A transfer task failed on a worker thread (original exception chained)."""
+
+
+def _task_label(direction: str) -> str:
+    return {UP: "upload", DOWN: "download", DISK: "disk"}.get(direction, direction)
 
 
 class TransferHandle:
@@ -60,7 +70,8 @@ class TransferHandle:
         self._event.wait()
         if self.error is not None:
             raise TransferError(
-                f"{self.direction}load task failed: {self.error}") from self.error
+                f"{_task_label(self.direction)} task failed: {self.error}"
+            ) from self.error
         return self.result
 
 
@@ -83,22 +94,24 @@ class TransferEngine:
         self._pending: List[TransferHandle] = []
         self._lock = threading.Lock()
         self.stats: Dict[str, float] = {
-            "tasks_up": 0, "tasks_down": 0,
+            "tasks_up": 0, "tasks_down": 0, "tasks_disk": 0,
             "bytes_up_raw": 0, "bytes_up_wire": 0,
             "bytes_down_raw": 0, "bytes_down_wire": 0,
+            "bytes_disk_raw": 0, "bytes_disk_wire": 0,
             "queue_wait_s": 0.0, "busy_s": 0.0,
         }
 
     # -- submission ----------------------------------------------------------
     def submit(self, direction: str, fn: Callable[[], Tuple[int, int]],
                deps: Sequence[TransferHandle] = ()) -> TransferHandle:
-        assert direction in (UP, DOWN), direction
+        assert direction in (UP, DOWN, DISK), direction
         handle = TransferHandle(direction)
         if self.mode == "sync":
             self._run(handle, fn, deps)
             if handle.error is not None:
                 raise TransferError(
-                    f"{direction}load task failed: {handle.error}") from handle.error
+                    f"{_task_label(direction)} task failed: {handle.error}"
+                ) from handle.error
             return handle
         with self._lock:
             self._pending.append(handle)
@@ -165,8 +178,8 @@ class TransferEngine:
                 first_error = h
         if first_error is not None:
             raise TransferError(
-                f"{first_error.direction}load task failed: {first_error.error}"
-            ) from first_error.error
+                f"{_task_label(first_error.direction)} task failed: "
+                f"{first_error.error}") from first_error.error
 
     def close(self) -> None:
         """Stop worker threads (they are daemons, so this is optional)."""

@@ -89,14 +89,21 @@ class ResidencyManager:
             "acquires": 0, "evictions": 0, "writeback_rows": 0,
             "carried_rows": 0, "elided_rows": 0, "pinned_hits": 0,
             "pinned_uploads": 0, "peak_required_bytes": 0,
+            "peak_home_bytes": 0, "host_overflow_bytes": 0,
         }
 
-    # -- capacity accounting (also the MemoryError split logic's oracle) -----
+    # -- capacity accounting (the oracle for BOTH memory tiers) --------------
+    # Fast tier: overflow is a hard MemoryError the executor answers by
+    # splitting the chain.  Host tier: overflow is *plannable* — the planner
+    # answers it with FetchHome/SpillHome ops against the disk-backed store —
+    # so ``host_overflow`` returns a verdict instead of raising.
     def required_bytes(self, slot_bytes: int, pinned_bytes: int = 0) -> int:
         return self.num_slots * int(slot_bytes) + int(pinned_bytes)
 
     def check_fit(self, slot_bytes: int, pinned_bytes: int = 0) -> int:
-        """Raise ``MemoryError`` when the plan cannot be fast-memory resident."""
+        """Raise ``MemoryError`` when the plan cannot be fast-memory resident
+        (the fast-tier half of the oracle; :meth:`host_overflow` is the host
+        tier's)."""
         req = self.required_bytes(slot_bytes, pinned_bytes)
         self.stats["peak_required_bytes"] = max(
             self.stats["peak_required_bytes"], req)
@@ -107,6 +114,21 @@ class ResidencyManager:
                 + f" exceed fast capacity {int(self.capacity_bytes)}B; "
                 f"increase num_tiles")
         return req
+
+    def host_overflow(self, home_bytes: int,
+                      host_capacity: Optional[float] = None) -> bool:
+        """Host-tier verdict: ``True`` when the chain's dataset home copies
+        exceed host RAM, so the planner must emit ``FetchHome``/``SpillHome``
+        ops and route the overflow through the disk-backed store."""
+        cap = float("inf") if host_capacity is None else float(host_capacity)
+        home_bytes = int(home_bytes)
+        self.stats["peak_home_bytes"] = max(
+            self.stats["peak_home_bytes"], home_bytes)
+        over = home_bytes > cap
+        if over:
+            self.stats["host_overflow_bytes"] = max(
+                self.stats["host_overflow_bytes"], int(home_bytes - cap))
+        return over
 
     # -- chain lifecycle ------------------------------------------------------
     def begin_chain(self, num_slots: Optional[int] = None) -> List[Slot]:

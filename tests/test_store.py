@@ -1,0 +1,414 @@
+"""repro.core.store: backing-store round-trips, chunk-cache eviction, mmap
+persistence, the disk-tier plan ops, and Session checkpoint/restore."""
+import os
+
+import numpy as np
+import pytest
+
+try:  # optional test extra: example-based tests run without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (
+    Block,
+    P100_PCIE,
+    Session,
+    StoreConfig,
+    StoreError,
+    make_dataset,
+)
+from repro.core.dataset import Dataset
+from repro.core.store import ChunkedStore, MmapStore, available_stores
+
+
+# -- store round-trips -------------------------------------------------------------
+
+
+def _specs(tmp_path):
+    return [
+        None,
+        "ram",
+        StoreConfig(kind="mmap", directory=str(tmp_path / "mm")),
+        StoreConfig(kind="chunked", directory=str(tmp_path / "ch"),
+                    chunk_bytes=256, cache_bytes=1 << 10),
+        StoreConfig(kind="chunked", directory=str(tmp_path / "ch-id"),
+                    chunk_bytes=512, cache_bytes=1 << 20, codec="identity"),
+    ]
+
+
+class TestRoundTrip:
+    def test_registry_has_all_three(self):
+        assert set(available_stores()) >= {"ram", "mmap", "chunked"}
+
+    def test_box_roundtrip_every_kind(self, tmp_path, rng):
+        blk = Block("b", (13, 9))
+        ref = rng.rand(13 + 2, 9 + 2).astype(np.float32)
+        boxes = [((0, 13), (0, 9)), ((-1, 3), (2, 9)), ((5, 14), (-1, 4)),
+                 ((0, 1), (0, 1))]
+        for spec in _specs(tmp_path):
+            dat = make_dataset(blk, "d", halo=1, init=ref, store=spec)
+            assert np.array_equal(dat.materialize(), ref)
+            for box in boxes:
+                idx = tuple(slice(a + 1, b + 1) for a, b in box)
+                assert np.array_equal(dat.read(box), ref[idx]), (spec, box)
+            patch = rng.rand(4, 5).astype(np.float32)
+            dat.write(((2, 6), (1, 6)), patch)
+            ref2 = ref.copy()
+            ref2[3:7, 2:7] = patch
+            assert np.array_equal(dat.materialize(), ref2), spec
+
+    def test_row_slab_api_matches_ram(self, tmp_path, rng):
+        blk = Block("b", (12, 7))
+        init = rng.rand(16, 11).astype(np.float32)
+        for spec in _specs(tmp_path)[2:]:
+            ram = make_dataset(blk, "d", halo=2, init=init)
+            other = make_dataset(blk, "d", halo=2, init=init, store=spec)
+            for lo, hi in ((-2, 3), (0, 12), (7, 14)):
+                assert np.array_equal(other.read_rows(0, lo, hi),
+                                      ram.read_rows(0, lo, hi))
+            vals = rng.rand(*np.shape(ram.read_rows(0, 1, 5))).astype(np.float32)
+            ram.write_rows(0, 1, 5, vals)
+            other.write_rows(0, 1, 5, vals)
+            assert np.array_equal(other.materialize(), ram.materialize())
+
+    def test_chunked_data_property_raises(self, tmp_path):
+        dat = make_dataset(Block("b", (8, 8)), "d",
+                           store=StoreConfig(kind="chunked",
+                                             directory=str(tmp_path)))
+        with pytest.raises(StoreError):
+            dat.data
+        # store-agnostic access still works
+        assert dat.materialize().shape == dat.padded_shape
+
+    def test_from_store_validates_shape(self, tmp_path):
+        st_ = ChunkedStore(str(tmp_path / "c"), (10, 10), np.float32)
+        with pytest.raises(StoreError):
+            Dataset.from_store(Block("b", (4, 4)), "d", st_, halo=1)
+        dat = Dataset.from_store(Block("b", (8, 8)), "d", st_, halo=1)
+        assert dat.store is st_
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=25, deadline=None)
+        @given(
+            rows=st.integers(3, 24),
+            cols=st.integers(1, 9),
+            chunk_bytes=st.integers(16, 512),
+            cache_bytes=st.integers(64, 2048),
+            ops=st.lists(
+                st.tuples(st.booleans(), st.integers(0, 23), st.integers(1, 9),
+                          st.integers(0, 10 ** 6)),
+                min_size=1, max_size=12),
+        )
+        def test_chunked_matches_ram_oracle(self, tmp_path_factory, rows, cols,
+                                            chunk_bytes, cache_bytes, ops):
+            """Random interleaved reads/writes against a plain array oracle."""
+            tmp = tmp_path_factory.mktemp("chunk-prop")
+            oracle = np.zeros((rows, cols), np.float32)
+            store = ChunkedStore(str(tmp), (rows, cols), np.float32,
+                                 chunk_bytes=chunk_bytes,
+                                 cache_bytes=cache_bytes)
+            for is_write, lo, ln, seed in ops:
+                lo = lo % rows
+                hi = min(rows, lo + ln)
+                if hi <= lo:
+                    continue
+                idx = (slice(lo, hi), slice(0, cols))
+                if is_write:
+                    vals = np.random.RandomState(seed).rand(
+                        hi - lo, cols).astype(np.float32)
+                    oracle[idx] = vals
+                    store.write(idx, vals)
+                else:
+                    assert np.array_equal(store.read(idx), oracle[idx])
+            assert np.array_equal(store.materialize(), oracle)
+
+
+# -- chunk cache -------------------------------------------------------------------
+
+
+class TestChunkCache:
+    def _store(self, tmp_path, nchunks=6, rows_per_chunk=2, cols=8,
+               cache_chunks=2):
+        chunk_nb = rows_per_chunk * cols * 4
+        return ChunkedStore(
+            str(tmp_path), (nchunks * rows_per_chunk, cols), np.float32,
+            chunk_bytes=chunk_nb, cache_bytes=cache_chunks * chunk_nb)
+
+    def test_eviction_is_lru_ordered(self, tmp_path):
+        store = self._store(tmp_path)
+        assert store.num_chunks == 6
+        row = lambda c: (slice(c * 2, c * 2 + 1), slice(None))
+        store.read(row(0))
+        store.read(row(1))
+        assert store.cache_keys() == (0, 1)
+        store.read(row(0))              # 0 becomes MRU
+        assert store.cache_keys() == (1, 0)
+        store.read(row(2))              # budget 2: LRU chunk 1 evicted
+        assert store.cache_keys() == (0, 2)
+        assert store.stats["chunk_evictions"] == 1
+        # clean eviction writes nothing
+        assert store.stats["disk_bytes_written"] == 0
+
+    def test_dirty_eviction_compresses_out_and_reloads(self, tmp_path, rng):
+        store = self._store(tmp_path)
+        vals = rng.rand(2, 8).astype(np.float32)
+        store.write((slice(0, 2), slice(0, 8)), vals)      # chunk 0 dirty
+        store.read((slice(2, 4), slice(None)))
+        store.read((slice(4, 6), slice(None)))             # evicts dirty 0
+        assert store.stats["disk_bytes_written"] > 0
+        assert os.path.exists(os.path.join(str(tmp_path), "chunk_000000.npz"))
+        got = store.read((slice(0, 2), slice(0, 8)))       # reload from disk
+        assert np.array_equal(got, vals)
+        assert store.stats["disk_bytes_read"] > 0
+
+    def test_budget_bounds_resident_bytes(self, tmp_path, rng):
+        store = self._store(tmp_path, cache_chunks=3)
+        for c in range(6):
+            store.write((slice(c * 2, c * 2 + 2), slice(None)),
+                        rng.rand(2, 8).astype(np.float32))
+        assert store.cache_resident_bytes() <= store.cache_bytes
+        assert len(store.cache_keys()) == 3
+        # flush persists the stragglers; full contents still correct
+        store.flush()
+        assert store.materialize().shape == (12, 8)
+
+    def test_reopen_with_different_geometry_rejected(self, tmp_path, rng):
+        store = self._store(tmp_path)
+        store.write((slice(0, 4), slice(None)),
+                    rng.rand(4, 8).astype(np.float32))
+        store.flush()
+        # same directory, different chunk_bytes -> chunk shapes disagree
+        bad = ChunkedStore(str(tmp_path), (12, 8), np.float32,
+                           chunk_bytes=4 * 8 * 4, cache_bytes=1 << 16)
+        with pytest.raises(StoreError):
+            bad.read((slice(0, 4), slice(None)))
+
+    def test_spill_evicts_fully_covered_chunks_only(self, tmp_path, rng):
+        store = self._store(tmp_path, cache_chunks=6)
+        store.write((slice(0, 5), slice(None)),
+                    rng.rand(5, 8).astype(np.float32))   # chunks 0,1,2 dirty
+        written = store.spill((slice(0, 4), slice(None)))
+        assert written > 0
+        keys = store.cache_keys()
+        assert 0 not in keys and 1 not in keys   # fully covered: dropped
+        assert 2 in keys                         # partially covered: kept
+        # nothing lost
+        assert store.read((slice(0, 5), slice(None))).shape == (5, 8)
+
+
+# -- mmap persistence --------------------------------------------------------------
+
+
+class TestMmapPersistence:
+    def test_reopen_sees_written_data(self, tmp_path, rng):
+        path = str(tmp_path / "d.mmap")
+        vals = rng.rand(10, 6).astype(np.float32)
+        store = MmapStore(path, (10, 6), np.float32, mode="w+")
+        store.write((slice(None), slice(None)), vals)
+        store.close()
+        again = MmapStore.open(path, (10, 6), np.float32)
+        assert np.array_equal(again.materialize(), vals)
+
+    def test_dataset_home_survives_reopen(self, tmp_path, rng):
+        blk = Block("b", (6, 6))
+        cfg = StoreConfig(kind="mmap", directory=str(tmp_path))
+        init = rng.rand(8, 8).astype(np.float32)
+        dat = make_dataset(blk, "field", halo=1, init=init, store=cfg)
+        dat.flush_store()
+        reopened = Dataset.from_store(
+            blk, "field",
+            MmapStore.open(str(tmp_path / "field.mmap"), (8, 8), np.float32),
+            halo=1)
+        assert np.array_equal(reopened.materialize(), init)
+
+    def test_reopen_size_mismatch_rejected(self, tmp_path):
+        path = str(tmp_path / "d.mmap")
+        MmapStore(path, (4, 4), np.float32, mode="w+").close()
+        with pytest.raises(StoreError):
+            MmapStore.open(path, (5, 4), np.float32)
+
+
+# -- dataset satellite: empty writes -----------------------------------------------
+
+
+class TestVersionSemantics:
+    def test_empty_write_does_not_bump_version(self):
+        dat = make_dataset(Block("b", (6, 6)), "d", halo=1)
+        v = dat.version
+        dat.write(((3, 3), (0, 6)), np.empty((0, 6), np.float32))
+        dat.write(((0, 6), (4, 4)), np.empty((6, 0), np.float32))
+        assert dat.version == v      # no-op writes must not invalidate caches
+        dat.write(((0, 1), (0, 6)), np.ones((1, 6), np.float32))
+        assert dat.version == v + 1
+
+
+# -- the disk tier through the executor --------------------------------------------
+
+
+def _mini_app(store=None, nx=20, ny=14):
+    from repro.apps import CloverLeaf2D
+
+    return CloverLeaf2D(nx, ny, summary_every=0, store=store)
+
+
+def _chunked_cfg(tmp_path, tag, cache_bytes=48 << 10):
+    return StoreConfig(kind="chunked", directory=str(tmp_path / tag),
+                       chunk_bytes=4 << 10, cache_bytes=cache_bytes)
+
+
+def _oversubscribed_hw(app, frac=0.3):
+    return P100_PCIE.with_(host_capacity=app.total_bytes() * frac)
+
+
+class TestDiskTier:
+    def test_chunked_bit_identical_to_ram_when_host_oversubscribed(
+            self, tmp_path):
+        """The acceptance criterion: a problem larger than the host budget
+        completes from a chunked store, bit-identical to the ram-store run,
+        with FetchHome/SpillHome in the plan and nonzero disk bytes."""
+        ram_app = _mini_app()
+        s_ram = Session("ooc", num_tiles=2, capacity_bytes=float("inf"))
+        ram_app.run(s_ram, steps=2)
+
+        ch_app = _mini_app(store=_chunked_cfg(tmp_path, "ch"))
+        hw = _oversubscribed_hw(ch_app)
+        s_ch = Session("ooc", hw=hw, num_tiles=2, capacity_bytes=float("inf"))
+        ch_app.run(s_ch, steps=2)
+
+        for name, dat in ram_app.dats.items():
+            assert np.array_equal(s_ram.fetch_raw(dat),
+                                  s_ch.fetch_raw(ch_app.dats[name])), name
+        st = s_ch.transfer_stats()
+        assert st["bytes_disk_written"] > 0
+        assert sum(c.op_counts["home_fetches"] for c in s_ch.history) > 0
+        assert sum(c.op_counts["home_spills"] for c in s_ch.history) > 0
+        ch_app.record_timestep(s_ch)
+        text = s_ch.explain()
+        assert "fetch-home" in text and "spill-home" in text
+        s_ch.queue.clear()
+
+    def test_threaded_matches_sync_with_disk_tier(self, tmp_path):
+        outs = {}
+        for mode in ("sync", "threaded"):
+            app = _mini_app(store=_chunked_cfg(tmp_path, mode,
+                                               cache_bytes=16 << 10))
+            s = Session("ooc", hw=_oversubscribed_hw(app), num_tiles=2,
+                        capacity_bytes=float("inf"), transfer=mode)
+            app.run(s, steps=2)
+            outs[mode] = {n: s.fetch_raw(d) for n, d in app.dats.items()}
+            s.close()
+        for name in outs["sync"]:
+            assert np.array_equal(outs["sync"][name],
+                                  outs["threaded"][name]), name
+
+    def test_sim_mode_costs_disk_traffic(self):
+        app = _mini_app()
+        hw = _oversubscribed_hw(app)
+        s = Session("sim", hw=hw, num_tiles=2, capacity_bytes=float("inf"))
+        app.record_init(s)
+        s.flush()
+        chain = s.history[-1]
+        # the init chain writes everything: spills only, no fetches
+        assert chain.disk_written > 0
+        assert chain.op_counts["home_spills"] > 0
+        app.record_timestep(s)
+        s.flush()
+        chain = s.history[-1]
+        assert chain.disk_read > 0
+        assert chain.op_counts["home_fetches"] > 0
+        app.record_timestep(s)
+        plans = s.plan()
+        tot = plans[-1].totals()
+        assert tot["disk_read"] > 0 and tot["disk_written"] > 0
+        s.queue.clear()
+        # host_capacity=inf (default) plans no disk ops for the same chain
+        s2 = Session("sim", num_tiles=2, capacity_bytes=float("inf"))
+        app.record_timestep(s2)
+        assert all(p.counts()["home_fetches"] == 0 for p in s2.plan())
+        s2.queue.clear()
+
+    def test_host_capacity_override_wins_over_hw(self):
+        app = _mini_app()
+        s = Session("sim", num_tiles=2, capacity_bytes=float("inf"),
+                    host_capacity=app.total_bytes() * 0.5)
+        app.record_init(s)
+        assert any(p.spill_home for p in s.plan())
+        s.queue.clear()
+
+
+# -- checkpoint / restore ----------------------------------------------------------
+
+
+class TestCheckpointRestore:
+    def _continue(self, app, sess, steps=1):
+        for _ in range(steps):
+            app.record_timestep(sess)
+        sess.flush()
+        return {n: sess.fetch_raw(d) for n, d in app.dats.items()}
+
+    @pytest.mark.parametrize("store_kind", ["ram", "chunked"])
+    def test_resume_is_bit_identical_on_cloverleaf2d(self, tmp_path,
+                                                     store_kind):
+        store = (None if store_kind == "ram"
+                 else _chunked_cfg(tmp_path, "ckpt-src"))
+        app = _mini_app(store=store)
+        sess = Session("ooc", num_tiles=2, capacity_bytes=float("inf"))
+        app.run(sess, steps=1)
+        ckpt = str(tmp_path / "state.npz")
+        manifest = sess.checkpoint(ckpt)
+        # covers every dataset a recorded loop touched (post_ener never is)
+        touched = set(manifest["datasets"])
+        assert touched <= set(app.dats) and "density0" in touched
+        dt, step_count = app.dt, app.step_count    # app-level scalars
+
+        final_a = self._continue(app, sess, steps=1)
+
+        # "kill": a fresh app + session, as a restarted process would build
+        app2 = _mini_app(store=(None if store_kind == "ram"
+                                else _chunked_cfg(tmp_path, "ckpt-dst")))
+        sess2 = Session("ooc", num_tiles=2, capacity_bytes=float("inf"))
+        sess2.restore(ckpt, datasets=app2.dats.values())
+        app2.dt, app2.step_count = dt, step_count
+        sess2.cyclic = True                        # app.run sets it post-init
+        final_b = self._continue(app2, sess2, steps=1)
+
+        for name in final_a:
+            assert np.array_equal(final_a[name], final_b[name]), name
+        for name, dat in app.dats.items():
+            assert dat.version == app2.dats[name].version
+
+    def test_checkpoint_is_atomic_write_then_rename(self, tmp_path):
+        app = _mini_app()
+        sess = Session("ooc", num_tiles=2, capacity_bytes=float("inf"))
+        app.record_init(sess)
+        sess.flush()
+        ckpt = tmp_path / "state.npz"
+        sess.checkpoint(str(ckpt))
+        assert ckpt.exists()
+        leftovers = [p for p in os.listdir(tmp_path) if ".tmp." in p]
+        assert not leftovers
+
+    def test_restore_into_wrong_shape_rejected(self, tmp_path):
+        app = _mini_app()
+        sess = Session("ooc", num_tiles=2, capacity_bytes=float("inf"))
+        app.record_init(sess)
+        sess.flush()
+        ckpt = str(tmp_path / "state.npz")
+        sess.checkpoint(ckpt)
+        other = _mini_app(nx=24, ny=18)
+        s2 = Session("ooc", num_tiles=2, capacity_bytes=float("inf"))
+        with pytest.raises(ValueError):
+            s2.restore(ckpt, datasets=other.dats.values())
+
+    def test_restore_missing_dataset_rejected(self, tmp_path):
+        app = _mini_app()
+        sess = Session("ooc", num_tiles=2, capacity_bytes=float("inf"))
+        app.record_init(sess)
+        sess.flush()
+        ckpt = str(tmp_path / "state.npz")
+        sess.checkpoint(ckpt)
+        s2 = Session("ooc")
+        with pytest.raises(KeyError):
+            s2.restore(ckpt, datasets=[list(app.dats.values())[0]])
