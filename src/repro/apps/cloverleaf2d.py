@@ -43,6 +43,10 @@ class CloverLeaf2D:
     # Home-copy tier for every dataset: None/"ram" (default), "mmap",
     # "chunked", or a repro.core.StoreConfig (see repro.core.store).
     store: object = None
+    # Device mesh for make_session(): None (unsharded) or anything
+    # repro.core.parse_mesh accepts — an int, "sim:N"/"jax:N", a DeviceMesh.
+    # Decomposes dim 1, composing with out-of-core tiling along dim 0.
+    mesh: object = None
 
     def __post_init__(self):
         nx, ny = self.nx, self.ny
@@ -83,6 +87,17 @@ class CloverLeaf2D:
 
     def d(self, name):
         return self.dats[name]
+
+    def make_session(self, backend: str = None, **overrides) -> Session:
+        """A Session wired for this app's ``mesh=`` knob: the ``ooc-sharded``
+        backend over the configured device mesh (plain ``ooc`` when
+        unsharded).  ``overrides`` are ExecutionConfig fields."""
+        kw: Dict[str, object] = {}
+        if self.mesh is not None:
+            kw["mesh"] = self.mesh
+            backend = backend or "ooc-sharded"
+        kw.update(overrides)
+        return Session(backend or "ooc", **kw)
 
     # -- initialisation chain ---------------------------------------------------
     def record_init(self, rt: Session, seed: int = 0) -> None:

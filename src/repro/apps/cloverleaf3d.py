@@ -36,6 +36,19 @@ class CloverLeaf3D:
     # Home-copy tier (repro.core.store): None/"ram", "mmap", "chunked", or
     # a StoreConfig.
     store: object = None
+    # Device mesh for make_session(): None or a repro.core.parse_mesh spec
+    # (int, "sim:N"/"jax:N", DeviceMesh); decomposes dim 1.
+    mesh: object = None
+
+    def make_session(self, backend: str = None, **overrides) -> Session:
+        """A Session wired for this app's ``mesh=`` knob (``ooc-sharded``
+        over the mesh; plain ``ooc`` when unsharded)."""
+        kw: Dict[str, object] = {}
+        if self.mesh is not None:
+            kw["mesh"] = self.mesh
+            backend = backend or "ooc-sharded"
+        kw.update(overrides)
+        return Session(backend or "ooc", **kw)
 
     def __post_init__(self):
         nx, ny, nz = self.nx, self.ny, self.nz

@@ -25,6 +25,7 @@ from .interp import (
     simulate_plan,
 )
 from .lazy import ReferenceRuntime, Runtime
+from .mesh import DeviceMesh, HaloSpec, MeshError, ShardGeometry, parse_mesh
 from .plan import (
     CarryEdge,
     Compute,
@@ -32,6 +33,9 @@ from .plan import (
     Elide,
     Evict,
     FetchHome,
+    HaloExchange,
+    HaloPack,
+    HaloUnpack,
     PinUpload,
     Plan,
     PlanOp,
@@ -44,6 +48,7 @@ from .plan import (
     plans_from_json,
     plans_to_json,
 )
+from .sharded import ShardedOutOfCoreExecutor, ShardingError
 from .store import (
     BackingStore,
     ChunkedStore,
@@ -119,8 +124,10 @@ __all__ = [
     "TransferEngine", "TransferError", "ResidencyManager", "ResidencyError",
     "Plan", "PlanOp", "Upload", "Download", "Compute", "CarryEdge", "Elide",
     "Evict", "Prefetch", "PinUpload", "WritebackPinned", "FetchHome",
-    "SpillHome", "build_plan",
+    "SpillHome", "HaloPack", "HaloExchange", "HaloUnpack", "build_plan",
     "format_plan", "plans_to_json", "plans_from_json",
+    "DeviceMesh", "HaloSpec", "MeshError", "ShardGeometry", "parse_mesh",
+    "ShardedOutOfCoreExecutor", "ShardingError",
     "BackingStore", "RamStore", "MmapStore", "ChunkedStore", "StoreConfig",
     "StoreError", "make_store", "register_store", "available_stores",
     "save_checkpoint", "load_checkpoint",

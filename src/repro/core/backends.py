@@ -18,10 +18,19 @@ Built-ins:
 ``ooc-cyclic``  ``ooc`` with the §4.1 unsafe-temporaries elision pre-enabled
 ``sim``         ``ooc`` without the data plane: the same Plan IR stream,
                 interpreted by the ledger interpreter only (modelled runs)
+``ooc-sharded`` device-mesh execution: the grid decomposed along
+                ``shard_dim`` over ``config.mesh`` (``"sim:N"`` virtual or
+                ``"jax:N"`` real devices), every shard running the full
+                out-of-core machinery with one accumulated-depth halo
+                exchange per chain (paper §5.2)
 ``pallas``      eager backend routing tagged star-sweep loops through the
                 Pallas TPU kernels in :mod:`repro.kernels` (fast path), with
                 the reference path for everything else
 ==============  ===============================================================
+
+Any ``ooc``-family backend given a multi-device ``mesh=`` transparently
+routes through the sharded executor — the mesh is an orthogonal axis of the
+config, not a separate code path.
 
 The ``ooc``-family backends (including ``sim`` and ``resident``'s inner
 executor) all lower chains to the typed instruction stream of
@@ -158,18 +167,30 @@ def _resident(config):
     return ResidentExecutor(hw=config.hw, capacity_bytes=config.capacity_bytes)
 
 
+def _ooc_executor(config, **overrides):
+    """The shared ooc-family builder: a plain executor, or — when the config
+    carries a multi-device mesh — the sharded one wrapping a per-device
+    executor per mesh entry."""
+    from .executor import OutOfCoreExecutor
+    from .sharded import ShardedOutOfCoreExecutor
+
+    ooc_cfg = config.ooc_config(**overrides)
+    mesh = getattr(config, "mesh", None)
+    if mesh is not None and mesh.num_devices > 1:
+        return ShardedOutOfCoreExecutor(
+            ooc_cfg, mesh=mesh, shard_dim=config.shard_dim,
+            halo_depth=config.halo_depth)
+    return OutOfCoreExecutor(ooc_cfg)
+
+
 @register_backend("ooc")
 def _ooc(config):
-    from .executor import OutOfCoreExecutor
-
-    return OutOfCoreExecutor(config.ooc_config())
+    return _ooc_executor(config)
 
 
 @register_backend("ooc-cyclic")
 def _ooc_cyclic(config):
-    from .executor import OutOfCoreExecutor
-
-    return OutOfCoreExecutor(config.ooc_config(cyclic=True))
+    return _ooc_executor(config, cyclic=True)
 
 
 @register_backend("ooc-async")
@@ -178,13 +199,23 @@ def _ooc_async(config):
     downloads stage on background workers and genuinely overlap compute.
     Bit-identical to ``ooc`` (tasks touch disjoint regions; functional
     updates commute) — threading changes wall-clock behaviour only."""
-    from .executor import OutOfCoreExecutor
-
-    return OutOfCoreExecutor(config.ooc_config(transfer="threaded"))
+    return _ooc_executor(config, transfer="threaded")
 
 
 @register_backend("sim")
 def _sim(config):
-    from .executor import OutOfCoreExecutor
+    return _ooc_executor(config, simulate_only=True)
 
-    return OutOfCoreExecutor(config.ooc_config(simulate_only=True))
+
+@register_backend("ooc-sharded")
+def _ooc_sharded(config):
+    """Device-mesh execution, explicitly: always the sharded executor, even
+    on a 1-device mesh (where it is bit-identical to ``ooc`` and simply
+    skips decomposition and exchange)."""
+    from .mesh import DeviceMesh
+    from .sharded import ShardedOutOfCoreExecutor
+
+    mesh = getattr(config, "mesh", None) or DeviceMesh.sim(1)
+    return ShardedOutOfCoreExecutor(
+        config.ooc_config(), mesh=mesh, shard_dim=config.shard_dim,
+        halo_depth=config.halo_depth)

@@ -117,6 +117,12 @@ class ChainStats:
     # chunk-cache misses), the FetchHome/SpillHome modelled bytes in sim mode.
     disk_read: int = 0
     disk_written: int = 0
+    # -- device mesh (repro.core.sharded) ------------------------------------
+    # Halo-exchange traffic this chain's plan carried (messages/bytes landing
+    # in this device's skirts; aggregated over devices by the sharded
+    # executor).  Zero for unsharded chains.
+    halo_messages: int = 0
+    halo_bytes: int = 0
 
 
 @dataclass
@@ -165,17 +171,28 @@ class OutOfCoreExecutor:
             pinned=frozenset(self.cfg.pinned))
         # Cross-chain speculative-prefetch state (shared by both interpreters).
         self._spec = SpecState()
+        # Collective halo-exchange hook: a mesh-owning parent executor
+        # (repro.core.sharded) installs a callable here so this executor's
+        # data-plane interpreter can run HaloExchange ops for real.
+        self.halo_runtime = None
         self.history: List[ChainStats] = []
 
     # -- planning ---------------------------------------------------------------
     def plan_chain(self, loops: Sequence[ParallelLoop],
-                   keep_live: frozenset = frozenset()) -> ChainPlan:
+                   keep_live: frozenset = frozenset(),
+                   halo=None, *, warm: frozenset = frozenset()) -> ChainPlan:
         """Analysis + tile scheduling + engine + the lowered Plan IR,
         memoised on the replay-safe ``plan_signature`` (structure, dataset
         identity, kernel fingerprints) plus the planning-relevant config
         knobs.  ``keep_live`` names datasets a split chain's remainder still
         reads (they may not be elided), and is part of the cache key because
         the §4.1 elision decisions are baked into the instruction stream.
+        ``halo`` (a :class:`~repro.core.mesh.HaloSpec`, sharded execution)
+        stamps the plan with its device-mesh position and places the
+        once-per-chain halo exchange at the head of the op stream.  ``warm``
+        names write-first dats that must stage anyway — a segmented chain's
+        earlier segment landed real home data the §4.1 upload elision would
+        let this segment's download clobber.
         Raises ``MemoryError`` (uncached) when no tile count fits, so
         ``run_chain`` can split."""
         cfg = self.cfg
@@ -183,7 +200,7 @@ class OutOfCoreExecutor:
                cfg.num_slots, float(cfg.capacity), float(cfg.host_budget),
                tuple(sorted(cfg.pinned)), bool(cfg.cyclic),
                bool(cfg.prefetch), cfg.codec_key(), cfg.flops_per_point,
-               tuple(sorted(keep_live)))
+               tuple(sorted(keep_live)), halo, tuple(sorted(warm)))
         plan = self._plans.get(key)
         if plan is not None:
             self._plans.move_to_end(key)
@@ -217,10 +234,10 @@ class OutOfCoreExecutor:
         ir = build_plan(
             info, sched, num_slots=cfg.num_slots, cyclic=cfg.cyclic,
             prefetch=cfg.prefetch, spill_home=spill_home,
-            keep_live=frozenset(keep_live),
+            keep_live=frozenset(keep_live), warm=frozenset(warm),
             pinned_names=pinned_names, codec_spec=cfg.codec,
             flops_per_point=cfg.flops_per_point, slot_bytes=slot_bytes,
-            pinned_bytes=pinned_bytes,
+            pinned_bytes=pinned_bytes, halo=halo,
         )
         # The engine (and its jit cache) is owned by the plan: sharing engines
         # across chains whose kernels differ only in captured constants would
@@ -269,7 +286,9 @@ class OutOfCoreExecutor:
     # -- main entry ------------------------------------------------------------
     def run_chain(self, loops: Sequence[ParallelLoop],
                   keep_live: frozenset = frozenset(), *,
-                  plan: Optional[Plan] = None) -> Dict[str, np.ndarray]:
+                  plan: Optional[Plan] = None,
+                  halo=None,
+                  warm: frozenset = frozenset()) -> Dict[str, np.ndarray]:
         """Plan one chain and interpret its instruction stream; if no tile
         count makes its slots fit fast memory (skew span exceeding the grid —
         long chains on small problems), split the chain and run the halves
@@ -285,7 +304,7 @@ class OutOfCoreExecutor:
         so its download cannot be elided — ``keep_live`` carries the dats the
         remainder of the original chain still consumes."""
         try:
-            return self._interpret_chain(loops, keep_live, plan)
+            return self._interpret_chain(loops, keep_live, plan, halo, warm)
         except MemoryError:
             if len(loops) <= 1 or plan is not None:
                 raise
@@ -293,22 +312,36 @@ class OutOfCoreExecutor:
             head, tail = loops[:mid], loops[mid:]
             tail_reads = frozenset(
                 a.dat.name for lp in tail for a in lp.args if a.mode.reads)
-            out = self.run_chain(head, keep_live | tail_reads)
+            # The halo exchange happens once at chain start: the head keeps
+            # it; the tail re-reads rows the head already refreshed.  The
+            # tail must also warm-stage anything the head wrote — the head's
+            # downloads landed real data its write-first elision would let
+            # the tail clobber.  This split policy is mirrored in
+            # Session._plan_split and ShardedOutOfCoreExecutor._plan_local;
+            # the three must stay in lock-step.
+            head_writes = frozenset(
+                a.dat.name for lp in head for a in lp.args if a.mode.writes)
+            out = self.run_chain(head, keep_live | tail_reads, halo=halo,
+                                 warm=warm)
             # Both halves may contribute to the same reduction: combine, not
             # overwrite.
             specs = {r.name: r for lp in loops for r in lp.reductions}
-            for name, val in self.run_chain(tail, keep_live).items():
+            for name, val in self.run_chain(tail, keep_live,
+                                            warm=warm | head_writes).items():
                 out[name] = (np.asarray(specs[name].combine(out[name], val))
                              if name in out else val)
             return out
 
     def _interpret_chain(self, loops: Sequence[ParallelLoop],
                          keep_live: frozenset,
-                         ir: Optional[Plan] = None) -> Dict[str, np.ndarray]:
+                         ir: Optional[Plan] = None,
+                         halo=None,
+                         warm: frozenset = frozenset()
+                         ) -> Dict[str, np.ndarray]:
         cfg = self.cfg
         t_wall = time.perf_counter()
         n_cached = self.plan_hits
-        cp = self.plan_chain(loops, keep_live)
+        cp = self.plan_chain(loops, keep_live, halo, warm=warm)
         cache_hit = self.plan_hits > n_cached
         if ir is None:
             ir = cp.ir
@@ -342,7 +375,8 @@ class OutOfCoreExecutor:
         else:
             interp = DataPlaneInterpreter(
                 ir, cfg.hw, rm=self.residency, spec=self._spec, cp=cp, tx=tx,
-                codecs=resolve_codecs(cfg.codec, tuple(cp.info.datasets)))
+                codecs=resolve_codecs(cfg.codec, tuple(cp.info.datasets)),
+                halo_runtime=self.halo_runtime)
         res = interp.run()
         tx_delta = tx.delta(tx.snapshot(), tx_before)
         raw_total = res.uploaded + res.downloaded
@@ -380,6 +414,8 @@ class OutOfCoreExecutor:
                 op_counts=ir.counts(),
                 disk_read=disk_read,
                 disk_written=disk_written,
+                halo_messages=res.halo_messages,
+                halo_bytes=res.halo_bytes,
             )
         )
         return res.reductions
@@ -417,6 +453,9 @@ class OutOfCoreExecutor:
             # disk tier (repro.core.store): bytes across the disk boundary
             "bytes_disk_read": sum(c.disk_read for c in self.history),
             "bytes_disk_written": sum(c.disk_written for c in self.history),
+            # device mesh (repro.core.sharded): halo-exchange traffic
+            "halo_messages": sum(c.halo_messages for c in self.history),
+            "halo_bytes": sum(c.halo_bytes for c in self.history),
         }
 
 

@@ -33,6 +33,9 @@ from .plan import (
     Elide,
     Evict,
     FetchHome,
+    HaloExchange,
+    HaloPack,
+    HaloUnpack,
     PinUpload,
     Plan,
     Prefetch,
@@ -86,6 +89,11 @@ class InterpResult:
     # executor replaces them with the stores' achieved counters on real runs.
     disk_read: int = 0
     disk_written: int = 0
+    # Device mesh (HaloExchange): messages/bytes this device's exchange
+    # received, straight from the plan annotations — the sharded executor
+    # checks these against the runtime's achieved HaloExchangeStats.
+    halo_messages: int = 0
+    halo_bytes: int = 0
 
 
 class LedgerInterpreter:
@@ -116,6 +124,7 @@ class LedgerInterpreter:
         self.edge_bytes = 0
         self.prefetch_hits = 0
         self.disk_read = self.disk_written = 0
+        self.halo_messages = self.halo_bytes = 0
         self.reductions: Dict[str, np.ndarray] = {}
         # event-id cursors (the four-stream dependency wiring)
         self.last_upload_eid: Optional[int] = None
@@ -126,6 +135,8 @@ class LedgerInterpreter:
         self.tile_slot: Dict[int, Any] = {}
         self.fetch_eids: Dict[int, int] = {}       # tile -> FetchHome event
         self.tile_down_eid: Dict[int, int] = {}    # tile -> Download event
+        self._halo_pack_eid: Optional[int] = None
+        self._halo_exchange_eid: Optional[int] = None
 
     # -- byte math over plan annotations --------------------------------------
     def _nbytes(self, name: str, lo: int, hi: int) -> int:
@@ -147,6 +158,9 @@ class LedgerInterpreter:
         WritebackPinned.kind: "op_pin_flush",
         FetchHome.kind: "op_fetch_home",
         SpillHome.kind: "op_spill_home",
+        HaloPack.kind: "op_halo_pack",
+        HaloExchange.kind: "op_halo_exchange",
+        HaloUnpack.kind: "op_halo_unpack",
     }
 
     def run(self) -> InterpResult:
@@ -172,6 +186,7 @@ class LedgerInterpreter:
             edge_bytes=self.edge_bytes, prefetch_hits=self.prefetch_hits,
             ledger=self.ledger,
             disk_read=self.disk_read, disk_written=self.disk_written,
+            halo_messages=self.halo_messages, halo_bytes=self.halo_bytes,
         )
 
     # -- lifecycle hooks (data plane overrides) -------------------------------
@@ -191,8 +206,10 @@ class LedgerInterpreter:
         self.uploaded += raw
         self.uploaded_wire += wire
         if wire:
+            deps = ((self.last_upload_eid,)
+                    if self.last_upload_eid is not None else ())
             self.last_upload_eid = self.ledger.add(
-                1, "upload", wire, self.ledger.t_up(wire), ())
+                1, "upload", wire, self.ledger.t_up(wire), deps)
 
     def pin_ensure(self, name: str, nb: int) -> Tuple[int, int]:
         """Make ``name`` device-resident; returns (raw, wire) actually moved
@@ -233,6 +250,41 @@ class LedgerInterpreter:
     def stage_spill_home(self, op: SpillHome, deps) -> Optional[int]:
         return self.ledger.add(3, "spill_home", op.raw,
                                self.ledger.t_disk(op.raw), deps)
+
+    # -- the network stream (device-mesh halo exchange) -----------------------
+    def op_halo_pack(self, op: HaloPack) -> None:
+        """Host-side copy of boundary rows into send buffers: stream 4,
+        costed at slow-memory bandwidth."""
+        self._halo_pack_eid = self.ledger.add(
+            4, "halo_pack", op.nbytes,
+            op.nbytes / self.hw.slow_bw if op.nbytes else 0.0, ())
+
+    def op_halo_exchange(self, op: HaloExchange) -> None:
+        """The §5.2 once-per-chain accumulated-depth exchange: network event
+        after the pack; the data plane additionally runs the real collective
+        via :meth:`exec_halo_exchange`."""
+        deps = ((self._halo_pack_eid,)
+                if self._halo_pack_eid is not None else ())
+        self.halo_messages += op.messages
+        self.halo_bytes += op.nbytes
+        self.exec_halo_exchange(op)
+        self._halo_exchange_eid = self.ledger.add(
+            4, "halo_exchange", op.nbytes,
+            self.ledger.t_net(op.nbytes, op.messages), deps)
+
+    def exec_halo_exchange(self, op: HaloExchange) -> None:
+        pass
+
+    def op_halo_unpack(self, op: HaloUnpack) -> None:
+        """Received rows land in the home skirt.  The unpack event becomes
+        the upload stream's FIFO head (``last_upload_eid``), so the chain's
+        first staged upload — which reads those home rows — waits for it."""
+        deps = ((self._halo_exchange_eid,)
+                if self._halo_exchange_eid is not None else ())
+        eid = self.ledger.add(
+            4, "halo_unpack", op.nbytes,
+            op.nbytes / self.hw.slow_bw if op.nbytes else 0.0, deps)
+        self.last_upload_eid = eid
 
     # -- staging --------------------------------------------------------------
     def spec_lookup(self, name: str, iv: Interval):
@@ -417,9 +469,14 @@ class DataPlaneInterpreter(LedgerInterpreter):
     """
 
     def __init__(self, plan: Plan, hw: HardwareModel, *, rm, spec, cp, tx,
-                 codecs):
+                 codecs, halo_runtime=None):
         super().__init__(plan, hw, rm=rm, spec=spec,
                          datasets=cp.info.datasets)
+        # Collective halo-exchange hook (sharded execution): the mesh-owning
+        # executor supplies a callable that moves the real rows (host copies
+        # on a virtual mesh, exchange_halos/ppermute under shard_map on a
+        # real one) exactly once per exchange epoch across all devices.
+        self.halo_runtime = halo_runtime
         self.cp = cp
         self.info = cp.info
         self.sched = cp.sched
@@ -525,6 +582,11 @@ class DataPlaneInterpreter(LedgerInterpreter):
         self.pinned_arrays[name] = arr
         self.pinned_origins[name] = origin
         return raw, wire
+
+    # -- the network stream (real halo exchange) ------------------------------
+    def exec_halo_exchange(self, op: HaloExchange) -> None:
+        if self.halo_runtime is not None:
+            self.halo_runtime(op)
 
     # -- the disk tier (real store traffic on the third worker lane) ----------
     def stage_fetch_home(self, op: FetchHome) -> Optional[int]:

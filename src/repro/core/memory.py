@@ -36,6 +36,11 @@ class HardwareModel:
     host_capacity: float = float("inf")  # host-RAM size (bytes)
     disk_bw: float = 2e9                 # spill-store streaming bandwidth
     disk_latency: float = 100e-6         # per-op service latency (seek/queue)
+    # -- network (device-mesh halo exchanges): per-message launch latency and
+    # achieved point-to-point bandwidth of the interconnect the sharded
+    # backend's HaloExchange ops ride (defaults ~100 GbE as achieved).
+    net_bw: float = 12.5e9               # bytes/s per link
+    net_latency: float = 20e-6           # per-message latency
 
     def with_(self, **kw) -> "HardwareModel":
         return replace(self, **kw)
@@ -81,9 +86,11 @@ PRESETS = {m.name: m for m in (KNL_7210, P100_PCIE, P100_NVLINK, TPU_V5E)}
 @dataclass
 class Event:
     eid: int
-    stream: int            # 0 = compute/edge, 1 = upload, 2 = download, 3 = disk
+    stream: int            # 0 = compute/edge, 1 = upload, 2 = download,
+    #                        3 = disk, 4 = network (halo exchange)
     kind: str              # upload | download | edge | compute | prefetch
     #                        | fetch_home | spill_home
+    #                        | halo_pack | halo_exchange | halo_unpack
     nbytes: int
     duration: float
     deps: Tuple[int, ...] = ()
@@ -118,6 +125,13 @@ class TransferLedger:
 
     def t_disk(self, nbytes: int) -> float:
         return self.hw.disk_latency + nbytes / self.hw.disk_bw if nbytes else 0.0
+
+    def t_net(self, nbytes: int, messages: int = 1) -> float:
+        """Halo-exchange time: per-message launch latency plus payload on the
+        interconnect (messages overlap across links; latency does not)."""
+        if not nbytes and not messages:
+            return 0.0
+        return messages * self.hw.net_latency + nbytes / self.hw.net_bw
 
     def t_compute(self, nbytes: int, flops: int) -> float:
         return max(nbytes / self.hw.fast_bw, flops / self.hw.flops)

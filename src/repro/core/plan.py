@@ -37,6 +37,7 @@ from dataclasses import dataclass, fields
 from typing import ClassVar, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from .dependency import ChainInfo, _merge, chain_signature
+from .mesh import HaloSpec
 from .tiling import TileSchedule
 from .transfer import resolve_codecs
 
@@ -85,6 +86,41 @@ class SpillHome(PlanOp):
     tile: int
     items: Tuple[Item, ...]
     raw: int
+
+
+@dataclass(frozen=True)
+class HaloPack(PlanOp):
+    """Stage this device's boundary rows for its neighbours (host-side copy
+    into send buffers).  ``nbytes`` counts the rows *sent*; ``names`` the
+    datasets exchanged (the chain's read set)."""
+
+    kind: ClassVar[str] = "halo-pack"
+    names: Tuple[str, ...]
+    nbytes: int
+
+
+@dataclass(frozen=True)
+class HaloExchange(PlanOp):
+    """One accumulated-depth halo exchange per chain (§5.2): neighbours'
+    interior rows land in this device's skirt.  ``depth`` is rows per
+    interior side; ``messages``/``nbytes`` count what this device receives,
+    so device sums reproduce the mesh-global exchange totals."""
+
+    kind: ClassVar[str] = "halo-exchange"
+    depth: int
+    messages: int
+    nbytes: int
+
+
+@dataclass(frozen=True)
+class HaloUnpack(PlanOp):
+    """Land received halo rows into this device's home skirt; chain staging
+    (the first ``Upload``) is gated on this — skirt rows must be current
+    before they are staged toward fast memory."""
+
+    kind: ClassVar[str] = "halo-unpack"
+    names: Tuple[str, ...]
+    nbytes: int
 
 
 @dataclass(frozen=True)
@@ -208,7 +244,8 @@ class WritebackPinned(PlanOp):
 OP_TYPES: Dict[str, type] = {
     cls.kind: cls
     for cls in (PinUpload, Upload, Compute, CarryEdge, Elide, Download,
-                Evict, Prefetch, WritebackPinned, FetchHome, SpillHome)
+                Evict, Prefetch, WritebackPinned, FetchHome, SpillHome,
+                HaloPack, HaloExchange, HaloUnpack)
 }
 
 
@@ -216,7 +253,9 @@ OP_TYPES: Dict[str, type] = {
 
 
 # v2: + ``spill_home`` plan flag and the FetchHome/SpillHome disk-tier ops.
-PLAN_JSON_VERSION = 2
+# v3: + device-mesh sharding — ``device``/``mesh_devices``/``shard_dim`` meta
+#     and the HaloPack/HaloExchange/HaloUnpack network ops.
+PLAN_JSON_VERSION = 3
 
 
 @dataclass(frozen=True)
@@ -244,6 +283,14 @@ class Plan:
     keep_live: Tuple[str, ...]                      # split-chain liveness
     tile_origins: Tuple[Tuple[Tuple[str, int], ...], ...]
     ops: Tuple[PlanOp, ...]
+    # -- device mesh (sharded execution): which device of how many this plan
+    # drives, and the decomposed dimension.  Defaults = unsharded.
+    device: int = 0
+    mesh_devices: int = 1
+    shard_dim: int = 1
+    # Write-first dats staged anyway (segmented chains: their home copies
+    # hold earlier-segment results the download would otherwise clobber).
+    warm: Tuple[str, ...] = ()
 
     # -- derived views -------------------------------------------------------
     def counts(self) -> Dict[str, int]:
@@ -251,7 +298,8 @@ class Plan:
         c = {"uploads": 0, "downloads": 0, "computes": 0, "carries": 0,
              "elisions": 0, "evictions": 0, "prefetches": 0,
              "pin_uploads": 0, "pin_writebacks": 0,
-             "home_fetches": 0, "home_spills": 0}
+             "home_fetches": 0, "home_spills": 0,
+             "halo_packs": 0, "halo_exchanges": 0, "halo_unpacks": 0}
         for op in self.ops:
             if isinstance(op, Upload):
                 if op.items:
@@ -276,12 +324,19 @@ class Plan:
                 c["home_fetches"] += 1
             elif isinstance(op, SpillHome):
                 c["home_spills"] += 1
+            elif isinstance(op, HaloPack):
+                c["halo_packs"] += 1
+            elif isinstance(op, HaloExchange):
+                c["halo_exchanges"] += 1
+            elif isinstance(op, HaloUnpack):
+                c["halo_unpacks"] += 1
         return c
 
     def totals(self) -> Dict[str, int]:
         """Modelled byte totals (cold caches, no prefetch hits)."""
         up_raw = up_wire = dn_raw = dn_wire = edge = flops = 0
         disk_read = disk_written = 0
+        halo_bytes = halo_messages = 0
         for op in self.ops:
             if isinstance(op, (Upload, PinUpload)):
                 up_raw += op.raw
@@ -297,10 +352,14 @@ class Plan:
                 disk_read += op.raw
             elif isinstance(op, SpillHome):
                 disk_written += op.raw
+            elif isinstance(op, HaloExchange):
+                halo_bytes += op.nbytes
+                halo_messages += op.messages
         return {"uploaded": up_raw, "uploaded_wire": up_wire,
                 "downloaded": dn_raw, "downloaded_wire": dn_wire,
                 "edge_bytes": edge, "flops": flops,
-                "disk_read": disk_read, "disk_written": disk_written}
+                "disk_read": disk_read, "disk_written": disk_written,
+                "halo_bytes": halo_bytes, "halo_messages": halo_messages}
 
     # -- JSON -----------------------------------------------------------------
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -316,7 +375,9 @@ class Plan:
     @classmethod
     def from_json(cls, text: str) -> "Plan":
         doc = json.loads(text)
-        if doc.get("version") != PLAN_JSON_VERSION:
+        # v2 documents load fine: every v3 addition (device/mesh_devices/
+        # shard_dim/warm meta, halo ops) defaults to the unsharded case.
+        if doc.get("version") not in (2, PLAN_JSON_VERSION):
             raise ValueError(
                 f"unsupported plan version {doc.get('version')!r} "
                 f"(expected {PLAN_JSON_VERSION})")
@@ -366,11 +427,13 @@ def build_plan(
     prefetch: bool = False,
     spill_home: bool = False,
     keep_live: FrozenSet[str] = frozenset(),
+    warm: FrozenSet[str] = frozenset(),
     pinned_names: FrozenSet[str] = frozenset(),
     codec_spec=None,
     flops_per_point: Optional[int] = None,
     slot_bytes: int = 0,
     pinned_bytes: int = 0,
+    halo: Optional[HaloSpec] = None,
 ) -> Plan:
     """Lower one analysed+scheduled chain to its instruction stream.
 
@@ -385,7 +448,13 @@ def build_plan(
     ``FetchHome`` of the same rows (disk -> host ahead of host -> device) and
     every download is followed by a ``SpillHome`` (host -> disk once the rows
     are retired).  Pinned datasets are exempt — pinning declares them small
-    and hot, i.e. host-resident for the whole run."""
+    and hot, i.e. host-resident for the whole run.
+
+    ``halo`` (sharded execution, :class:`~repro.core.mesh.HaloSpec`) places
+    the paper's §5.2 one-accumulated-depth-per-chain exchange at the head of
+    the stream — ``HaloPack`` -> ``HaloExchange`` -> ``HaloUnpack`` on the
+    network stream, gating the chain's first staged upload — and stamps the
+    plan with its device position on the mesh."""
     td = info.tiled_dim
     num_tiles = sched.num_tiles
     early_submit = num_slots >= 2
@@ -415,6 +484,13 @@ def build_plan(
 
     ops: List[PlanOp] = []
 
+    # -- the halo exchange (device mesh, once per chain) ---------------------
+    if halo is not None and halo.num_devices > 1 and halo.messages:
+        ops.append(HaloPack(names=halo.names, nbytes=halo.nbytes))
+        ops.append(HaloExchange(depth=halo.depth, messages=halo.messages,
+                                nbytes=halo.nbytes))
+        ops.append(HaloUnpack(names=halo.names, nbytes=halo.nbytes))
+
     # -- pinned residency (whole-array, cached across chains) ----------------
     if pinned_names:
         entries = tuple((name, int(info.datasets[name].nbytes))
@@ -431,9 +507,13 @@ def build_plan(
         for name, pieces in tile.upload.items():
             if name in pinned_names:
                 continue            # whole-array resident: never staged
-            if name in info.write_first:
+            if name in info.write_first and name not in warm:
                 # §4.1: write-first data never uploads — except rows the chain
                 # reads before any write reaches them (cold halo skirts).
+                # ``warm`` overrides the elision: a segmented chain's earlier
+                # segment already landed real data home (e.g. halo-mirror
+                # columns), which this segment's full-width download would
+                # clobber with zero-initialised slot content if not staged.
                 cold = info.cold.get(name, [])
                 pieces = tuple(
                     p for iv in pieces
@@ -605,6 +685,10 @@ def build_plan(
         keep_live=tuple(sorted(keep_live)),
         tile_origins=tile_origins,
         ops=tuple(ops),
+        device=halo.device if halo is not None else 0,
+        mesh_devices=halo.num_devices if halo is not None else 1,
+        shard_dim=halo.shard_dim if halo is not None else 1,
+        warm=tuple(sorted(warm)),
     )
 
 
@@ -642,7 +726,9 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
         + f", codec {'/'.join(codec_set)}"
         + (", cyclic" if plan.cyclic else "")
         + (", prefetch" if plan.prefetch else "")
-        + (", disk tier (host oversubscribed)" if plan.spill_home else ""),
+        + (", disk tier (host oversubscribed)" if plan.spill_home else "")
+        + (f", device {plan.device}/{plan.mesh_devices}"
+           f" (shard dim {plan.shard_dim})" if plan.mesh_devices > 1 else ""),
     ]
     cur_tile = None
     for op in plan.ops:
@@ -650,7 +736,16 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
         if t is not None and t != cur_tile:
             cur_tile = t
             lines.append(f"  tile {t} -> slot {t % plan.num_slots}")
-        if isinstance(op, PinUpload):
+        if isinstance(op, HaloPack):
+            lines.append(f"  halo-pack   {len(op.names)} dats"
+                         f"  {_mb(op.nbytes)}")
+        elif isinstance(op, HaloExchange):
+            lines.append(f"  halo-exchange depth {op.depth},"
+                         f" {op.messages} msgs, {_mb(op.nbytes)} (net)")
+        elif isinstance(op, HaloUnpack):
+            lines.append(f"  halo-unpack {len(op.names)} dats"
+                         f"  {_mb(op.nbytes)}")
+        elif isinstance(op, PinUpload):
             names = " ".join(n for n, _ in op.entries)
             lines.append(f"  pin-upload {names}  {_mb(op.raw)}"
                          f" (wire {_mb(op.wire)})")
@@ -692,7 +787,9 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
         f" down {_mb(tot['downloaded'])} (wire {_mb(tot['downloaded_wire'])}),"
         f" edge {_mb(tot['edge_bytes'])}"
         + (f", disk r/w {_mb(tot['disk_read'])}/{_mb(tot['disk_written'])}"
-           if plan.spill_home else ""))
+           if plan.spill_home else "")
+        + (f", halo {_mb(tot['halo_bytes'])} in {tot['halo_messages']} msgs"
+           if tot["halo_messages"] else ""))
     lines.append(
         "  ops: " + ", ".join(f"{v} {k}" for k, v in plan.counts().items() if v))
     if hw is not None:
@@ -700,7 +797,9 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
 
         res = simulate_plan(plan, hw)
         bw = plan.loop_bytes / res.makespan / 1e9 if res.makespan else 0.0
-        lines.append(f"  modelled makespan ({hw.name}): "
+        who = (f"device {plan.device}, {hw.name}"
+               if plan.mesh_devices > 1 else hw.name)
+        lines.append(f"  modelled makespan ({who}): "
                      f"{res.makespan * 1e3:.3f} ms"
                      f"  ({bw:.1f} GB/s avg over {_mb(plan.loop_bytes)}"
                      f" useful bytes)")

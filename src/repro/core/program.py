@@ -74,6 +74,15 @@ class ExecutionConfig:
     # Host-RAM budget for dataset home copies; chains whose working set
     # exceeds it plan FetchHome/SpillHome ops against the disk-backed stores.
     host_capacity: Optional[float] = None    # default: hw.host_capacity
+    # -- device mesh (repro.core.mesh / repro.core.sharded) --------------------
+    # Grid decomposition along ``shard_dim``: a DeviceMesh, an int (virtual
+    # sim:N mesh) or a "sim:N"/"jax:N" spec.  Any ooc-family backend with a
+    # multi-device mesh routes through the sharded executor; ``halo_depth``
+    # bounds the redundant-compute skirt (rows per interior side; default:
+    # auto from the shard width).
+    mesh: Union[None, int, str, "DeviceMesh"] = None  # noqa: F821
+    shard_dim: int = 1
+    halo_depth: Optional[int] = None
 
     def __post_init__(self) -> None:
         if isinstance(self.hw, str):
@@ -82,6 +91,9 @@ class ExecutionConfig:
                     f"unknown hardware preset {self.hw!r}; "
                     f"available: {sorted(PRESETS)}")
             self.hw = PRESETS[self.hw]
+        from .mesh import parse_mesh
+
+        self.mesh = parse_mesh(self.mesh)
 
     def ooc_config(self, **overrides):
         """Materialise the executor-level :class:`OOCConfig`."""
@@ -521,15 +533,16 @@ class Session:
     def _planning_executor(self):
         """The OOC executor that builds Plan IRs for this session's backend."""
         from .executor import OutOfCoreExecutor, ResidentExecutor
+        from .sharded import ShardedOutOfCoreExecutor
 
         be = self.backend
-        if isinstance(be, OutOfCoreExecutor):
+        if isinstance(be, (OutOfCoreExecutor, ShardedOutOfCoreExecutor)):
             return be
         if isinstance(be, ResidentExecutor):
             return be._inner
         raise ValueError(
             f"backend {type(be).__name__} does not build plans; use an "
-            f"ooc/ooc-async/ooc-cyclic/sim/resident session")
+            f"ooc/ooc-async/ooc-cyclic/ooc-sharded/sim/resident session")
 
     def plan(self, loops=None):
         """Lower the queued loops (or ``loops``) to their Plan IRs *without*
@@ -551,10 +564,16 @@ class Session:
             plans.extend(self._plan_split(ex, chain, frozenset()))
         return plans
 
-    def _plan_split(self, ex, loops, keep_live):
-        """Mirror ``run_chain``'s MemoryError chain splitting, plans only."""
+    def _plan_split(self, ex, loops, keep_live, warm=frozenset()):
+        """Mirror ``run_chain``'s MemoryError chain splitting, plans only.
+        Sharded backends plan per device (segments x shards): their chain
+        plans carry a tuple of device-annotated Plan IRs, flattened here.
+        The split policy must stay in lock-step with
+        ``OutOfCoreExecutor.run_chain`` and
+        ``ShardedOutOfCoreExecutor._plan_local``."""
         try:
-            return [ex.plan_chain(loops, keep_live).ir]
+            ir = ex.plan_chain(loops, keep_live, warm=warm).ir
+            return list(ir) if isinstance(ir, tuple) else [ir]
         except MemoryError:
             if len(loops) <= 1:
                 raise
@@ -562,13 +581,18 @@ class Session:
             head, tail = loops[:mid], loops[mid:]
             tail_reads = frozenset(
                 a.dat.name for lp in tail for a in lp.args if a.mode.reads)
-            return (self._plan_split(ex, head, keep_live | tail_reads)
-                    + self._plan_split(ex, tail, keep_live))
+            head_writes = frozenset(
+                a.dat.name for lp in head for a in lp.args if a.mode.writes)
+            return (self._plan_split(ex, head, keep_live | tail_reads, warm)
+                    + self._plan_split(ex, tail, keep_live,
+                                       warm | head_writes))
 
     def explain(self, loops=None) -> str:
         """Human-readable per-tile op listing for the queued loops (or
         ``loops``): staging/compute/carry/download per tile with modelled
-        bytes, op totals, and the ledger-modelled makespan per chain."""
+        bytes, op totals, and the ledger-modelled makespan per chain.  On a
+        sharded session every device's stream is listed (with its halo ops
+        and per-device makespan), followed by a mesh summary line."""
         from .plan import format_plan
 
         plans = self.plan(loops)
@@ -576,9 +600,40 @@ class Session:
             return "(nothing queued: record loops before explain())"
         hw = self.config.hw if self.config is not None else getattr(
             getattr(self.backend, "cfg", None), "hw", None)
-        return "\n\n".join(
-            format_plan(p, hw, title=f"chain {i}/{len(plans)}")
-            for i, p in enumerate(plans))
+        from .interp import simulate_plan
+
+        per_dev: Dict[int, float] = {}
+        msgs = nbytes = 0
+        blocks = []
+        for i, p in enumerate(plans):
+            title = (f"chain {i}/{len(plans)}"
+                     + (f" · device {p.device}/{p.mesh_devices}"
+                        if p.mesh_devices > 1 else ""))
+            if p.mesh_devices > 1 and hw is not None:
+                # Simulate once: the per-plan makespan line and the mesh
+                # summary share the same result.
+                res = simulate_plan(p, hw)
+                bw = (p.loop_bytes / res.makespan / 1e9
+                      if res.makespan else 0.0)
+                blocks.append(
+                    format_plan(p, None, title=title)
+                    + f"\n  modelled makespan (device {p.device}, "
+                    f"{hw.name}): {res.makespan * 1e3:.3f} ms"
+                    f"  ({bw:.1f} GB/s avg)")
+                per_dev[p.device] = per_dev.get(p.device, 0.0) + res.makespan
+                tot = p.totals()
+                msgs += tot["halo_messages"]
+                nbytes += tot["halo_bytes"]
+            else:
+                blocks.append(format_plan(p, hw, title=title))
+        if per_dev:
+            devs = " ".join(f"d{d}={t * 1e3:.3f}ms"
+                            for d, t in sorted(per_dev.items()))
+            blocks.append(
+                f"mesh summary: per-device makespans {devs}; critical "
+                f"device {max(per_dev.values()) * 1e3:.3f} ms; halo "
+                f"{msgs} msgs / {nbytes / 1e6:.3f} MB")
+        return "\n\n".join(blocks)
 
     def tune(self, loops=None, *, apply: bool = False, repeats: int = 2,
              **grids):
@@ -624,8 +679,13 @@ class Session:
         self.flush()
         dats = list(datasets) if datasets is not None else list(
             self.datasets.values())
-        plans = getattr(self.backend, "_plans", {})
-        sigs = [cp.ir.sig_hash for cp in plans.values()
+        # Sharded backends keep their plan caches on the per-device inner
+        # executors — aggregate so multi-device checkpoints carry the same
+        # plan-signature provenance as unsharded ones.
+        plans = list(getattr(self.backend, "_plans", {}).values())
+        for ex in getattr(self.backend, "inner", ()):
+            plans.extend(getattr(ex, "_plans", {}).values())
+        sigs = [cp.ir.sig_hash for cp in plans
                 if getattr(cp, "ir", None) is not None]
         return save_checkpoint(path, dats,
                                chains_flushed=self.chains_flushed,
@@ -678,6 +738,23 @@ class Session:
         if fn is not None:
             fn()
 
+    # -- context manager: worker threads must not outlive the with-block ------
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            # The body died mid-recording: executing a half-recorded queue
+            # during unwinding would mutate dataset homes the user never
+            # asked for (and could mask the original exception).  Drop the
+            # queue, release backend resources, let the exception propagate.
+            self.queue.clear()
+            fn = getattr(self.backend, "close", None)
+            if fn is not None:
+                fn()
+            return
+        self.close()
+
     def transfer_stats(self) -> Dict[str, float]:
         """Transfer-subsystem counters: raw vs post-codec wire bytes, the
         achieved compression ratio, and queue-wait time (zeros/defaults for
@@ -691,6 +768,7 @@ class Session:
             "compression_ratio": 1.0, "queue_wait_s": 0.0,
             "elided_rows": 0, "evictions": 0, "pinned_hits": 0,
             "bytes_disk_read": 0, "bytes_disk_written": 0,
+            "halo_messages": 0, "halo_bytes": 0,
         }
 
 

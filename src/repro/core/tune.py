@@ -44,10 +44,12 @@ class TuneResult:
     def summary(self) -> str:
         b = self.best
         feas = sum(1 for r in self.rows if r["feasible"])
+        mesh = getattr(b, "mesh", None)
         return (
             f"tune: {len(self.rows)} candidates ({feas} feasible); best "
             f"num_tiles={b.num_tiles} tiled_dim={b.tiled_dim} "
-            f"num_slots={b.num_slots} codec={b.codec!r}: "
+            f"num_slots={b.num_slots} codec={b.codec!r}"
+            + (f" mesh={mesh.spec}" if mesh is not None else "") + ": "
             f"{self.best_makespan * 1e3:.3f} ms modelled vs baseline "
             f"{self.baseline_makespan * 1e3:.3f} ms ({self.speedup:.2f}x)")
 
@@ -66,6 +68,17 @@ def split_chains(loops: Sequence[ParallelLoop]) -> List[List[ParallelLoop]]:
     return chains
 
 
+def make_sim_executor(config):
+    """A throwaway ledger-only executor for ``config`` — sharded when the
+    config carries a multi-device mesh, so the tuner's shard-count
+    candidates are costed with their per-device streams and halo ops.
+    Delegates to the backend registry's builder so the tuner can never cost
+    a different executor shape than ``make_backend`` would construct."""
+    from .backends import _ooc_executor
+
+    return _ooc_executor(config, simulate_only=True, transfer="sync")
+
+
 def modelled_makespan(config, chains: Sequence[Sequence[ParallelLoop]],
                       repeats: int = 1) -> float:
     """Total modelled seconds for ``chains`` under ``config`` (sim only).
@@ -75,10 +88,7 @@ def modelled_makespan(config, chains: Sequence[Sequence[ParallelLoop]],
     from the second pass on, so tuning for a long run should cost more than
     one.  Raises ``MemoryError`` only if a single loop cannot fit (the
     executor splits chains exactly as a real run would)."""
-    from .executor import OutOfCoreExecutor
-
-    ex = OutOfCoreExecutor(config.ooc_config(
-        simulate_only=True, transfer="sync"))
+    ex = make_sim_executor(config)
     for _ in range(max(1, repeats)):
         for chain in chains:
             ex.run_chain(list(chain))
@@ -93,8 +103,15 @@ def candidate_configs(
     tiled_dims: Optional[Sequence[int]] = None,
     codecs: Optional[Sequence] = None,
     allow_lossy: bool = False,
+    meshes: Optional[Sequence] = None,
 ) -> List:
-    """The candidate grid, base config first (ties resolve to the default)."""
+    """The candidate grid, base config first (ties resolve to the default).
+
+    ``meshes`` (optional) enumerates device-mesh shard counts — entries are
+    anything :func:`repro.core.mesh.parse_mesh` accepts (ints, "sim:N",
+    DeviceMesh); the base config's mesh stays the first candidate."""
+    from .mesh import parse_mesh
+
     if num_tiles is None:
         num_tiles = (None, 2, 4, 8, 16, 32)
     if num_slots is None:
@@ -111,19 +128,30 @@ def candidate_configs(
     cs = list(dict.fromkeys(([base_codec] if base_codec else []) + list(codecs)))
     if not isinstance(base.codec, str):
         cs.insert(0, base.codec)   # per-dat dict spec: keep as-is candidate
+    # A 1-device mesh builds the identical unsharded executor as mesh=None
+    # (_ooc_executor only shards when num_devices > 1) — canonicalise so the
+    # grid doesn't cost the same candidate twice.
+    def canon(m):
+        m = parse_mesh(m)
+        return None if m is not None and m.num_devices == 1 else m
+
+    ms = list(dict.fromkeys(
+        [canon(getattr(base, "mesh", None))]
+        + [canon(m) for m in (meshes or ())]))
     out = []
     seen = set()
     for t in nt:
         for s in ns:
             for d in td:
                 for c in cs:
-                    key = (t, s, d, c if isinstance(c, str)
-                           else tuple(sorted(c.items())))
-                    if key in seen:
-                        continue
-                    seen.add(key)
-                    out.append(replace(base, num_tiles=t, num_slots=s,
-                                       tiled_dim=d, codec=c))
+                    for m in ms:
+                        key = (t, s, d, c if isinstance(c, str)
+                               else tuple(sorted(c.items())), m)
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        out.append(replace(base, num_tiles=t, num_slots=s,
+                                           tiled_dim=d, codec=c, mesh=m))
     return out
 
 
@@ -136,10 +164,13 @@ def tune_configs(
     tiled_dims: Optional[Sequence[int]] = None,
     codecs: Optional[Sequence] = None,
     allow_lossy: bool = False,
+    meshes: Optional[Sequence] = None,
     repeats: int = 2,
 ) -> TuneResult:
     """Cost every candidate config on ``loops`` via the sim interpreter and
-    return the best (modelled makespan, infeasible candidates excluded)."""
+    return the best (modelled makespan, infeasible candidates excluded).
+    ``meshes=[1, 2, 4]`` additionally enumerates device-mesh shard counts
+    (costed per device, halo exchanges included)."""
     if not loops:
         raise ValueError("nothing to tune: record loops first")
     if base.backend in _SIM_EXCLUDED:
@@ -149,16 +180,21 @@ def tune_configs(
     chains = split_chains(loops)
     ndim = loops[0].block.ndim
     cands = candidate_configs(base, ndim, num_tiles, num_slots, tiled_dims,
-                              codecs, allow_lossy)
+                              codecs, allow_lossy, meshes)
     rows: List[Dict] = []
     best_cfg = None
     best_t = float("inf")
     baseline_t = float("inf")
+    from .mesh import MeshError
+
     for i, cand in enumerate(cands):
         try:
             t = modelled_makespan(cand, chains, repeats=repeats)
             feasible = True
-        except MemoryError:
+        except (MemoryError, MeshError):
+            # MemoryError: no tile count fits fast memory.  MeshError: the
+            # grid cannot be decomposed that way (too many devices, skirt
+            # exceeding the shard width).
             t = float("inf")
             feasible = False
         rows.append({
@@ -166,6 +202,7 @@ def tune_configs(
             "tiled_dim": cand.tiled_dim,
             "codec": (cand.codec if isinstance(cand.codec, str)
                       else dict(cand.codec)),
+            "mesh": cand.mesh.spec if getattr(cand, "mesh", None) else None,
             # None, not inf: rows land in JSON reports and bare Infinity
             # is not valid strict JSON.
             "modelled_s": t if feasible else None, "feasible": feasible,

@@ -1,5 +1,19 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 real device
-(the dry-run sets its own device count in its own process)."""
+"""Shared fixtures.
+
+Multi-device tests (the sharded backend's jax meshes, in-process halo
+exchanges) need several XLA host devices in the MAIN pytest process, so the
+flag is forced here — conftest imports before any test module can import
+jax, which is exactly the ordering the old per-module self-configuration
+could not guarantee.  CI sets the same flag at the job level; an operator's
+own XLA_FLAGS is never clobbered.  Subprocess-based tests (dry-run, the
+distributed scripts) still set their own count in their own process.
+"""
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ and "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
 import numpy as np
 import pytest
 

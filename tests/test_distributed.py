@@ -31,7 +31,8 @@ _SCRIPT_HALO = textwrap.dedent("""
     garr = jax.device_put(np.concatenate(locs, 1), NamedSharding(mesh, P(None, "x")))
 
     def local(arrays):
-        arrays = exchange_halos(arrays, halo, "x", dim=1)
+        # np.roll reference == periodic boundaries: ask for the wrap.
+        arrays = exchange_halos(arrays, halo, "x", dim=1, periodic=True)
         u = arrays["u"]
         for _ in range(2):
             u = 0.5 * u + 0.25 * (jnp.roll(u, 1, 1) + jnp.roll(u, -1, 1))
@@ -106,6 +107,193 @@ def test_depth0_exchange_skips_collective():
                      lambda acc: {"a": acc("a") * 0.5}),
     ]
     assert chain_halo_depth(loops, dim=1) == 0
+
+
+def _make_mesh(n):
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} XLA devices (conftest forces 8)")
+    return Mesh(np.asarray(jax.devices()[:n]), ("x",))
+
+
+def test_exchange_halos_nonperiodic_keeps_edge_halos():
+    """Regression (2-device mesh): with the default non-periodic semantics
+    the edge ranks must NOT receive wrapped-around data — their outer halo
+    slots keep the caller's boundary values, while the interior boundary
+    still exchanges.  The old periodic-ring behaviour handed rank 0 the
+    opposite edge's interior."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.distributed import exchange_halos
+
+    mesh = _make_mesh(2)
+    depth, per, nrows = 2, 6, 4
+    w = per + 2 * depth
+    rng = np.random.RandomState(3)
+    local = rng.rand(2, nrows, w).astype(np.float32)  # [rank, rows, cols]
+    stacked = np.concatenate([local[0], local[1]], axis=1)
+    garr = jax.device_put(stacked, NamedSharding(mesh, P(None, "x")))
+
+    def run(periodic):
+        fn = jax.jit(shard_map(
+            lambda a: exchange_halos({"u": a}, depth, "x", dim=1,
+                                     periodic=periodic)["u"],
+            mesh=mesh, in_specs=P(None, "x"), out_specs=P(None, "x"),
+            check_vma=False))
+        out = np.asarray(fn(garr))
+        return out[:, :w], out[:, w:]
+
+    r0, r1 = run(False)
+    # Edge halos untouched; interiors untouched.
+    np.testing.assert_array_equal(r0[:, :depth], local[0][:, :depth])
+    np.testing.assert_array_equal(r1[:, -depth:], local[1][:, -depth:])
+    np.testing.assert_array_equal(r0[:, depth:-depth],
+                                  local[0][:, depth:-depth])
+    # Interior boundary exchanged: r0's high halo = r1's low interior etc.
+    np.testing.assert_array_equal(r0[:, -depth:],
+                                  local[1][:, depth:2 * depth])
+    np.testing.assert_array_equal(r1[:, :depth],
+                                  local[0][:, -2 * depth:-depth])
+    # periodic=True restores the wrap for grids that want it.
+    p0, p1 = run(True)
+    np.testing.assert_array_equal(p0[:, :depth],
+                                  local[1][:, -2 * depth:-depth])
+    np.testing.assert_array_equal(p1[:, -depth:],
+                                  local[0][:, depth:2 * depth])
+
+
+class TestShardedChainStep:
+    """make_sharded_chain_step: correctness vs the reference runtime and the
+    §5.2 per-chain vs per-loop message accounting (previously untested)."""
+
+    N, M, DEPTH = 8, 32, 2  # two loops x stencil extent 1 -> chain depth 2
+
+    def _loops(self):
+        """A 2-loop ping-pong smoothing chain on the repro.core DSL."""
+        import numpy as np
+
+        from repro.core import Arg, Block, READ, WRITE, make_dataset
+        from repro.core import point_stencil, star_stencil
+        from repro.core.loop import ParallelLoop
+
+        blk = Block("g", (self.N, self.M))
+        rng = np.random.RandomState(7)
+        u0 = rng.rand(self.N, self.M).astype(np.float32)
+        u = make_dataset(blk, "u", halo=self.DEPTH, init=u0)
+        v = make_dataset(blk, "v", halo=self.DEPTH)
+        S = star_stencil(2, 1)
+        Z = point_stencil(2)
+
+        def k_uv(acc):
+            return {"v": 0.5 * acc("u") + 0.25 * (acc("u", (0, -1))
+                                                  + acc("u", (0, 1)))}
+
+        def k_vu(acc):
+            return {"u": 0.5 * acc("v") + 0.25 * (acc("v", (0, -1))
+                                                  + acc("v", (0, 1)))}
+
+        rng_box = ((0, self.N), (0, self.M))
+        loops = [
+            ParallelLoop("uv", blk, rng_box,
+                         (Arg(u, S, READ), Arg(v, Z, WRITE)), k_uv),
+            ParallelLoop("vu", blk, rng_box,
+                         (Arg(v, S, READ), Arg(u, Z, WRITE)), k_vu),
+        ]
+        return u0, u, v, loops
+
+    def _sharded_step(self, n_ranks, per_loop):
+        import jax.numpy as jnp
+        from jax import lax
+
+        from repro.core.distributed import make_sharded_chain_step
+
+        mesh = _make_mesh(n_ranks)
+        per = self.M // n_ranks
+        D = self.DEPTH
+        W = per + 2 * D
+
+        def smooth(arr):
+            return (0.5 * arr + 0.25 * (jnp.roll(arr, 1, 1)
+                                        + jnp.roll(arr, -1, 1)))
+
+        def masked(write_to, read_from):
+            def fn(arrays):
+                rank = lax.axis_index("x")
+                cols = rank * per + jnp.arange(W) - D
+                mask = ((cols >= 0) & (cols < self.M))[None, :]
+                out = dict(arrays)
+                out[write_to] = jnp.where(mask, smooth(arrays[read_from]),
+                                          arrays[write_to])
+                return out
+            return fn
+
+        loop_fns = [masked("v", "u"), masked("u", "v")]
+
+        def chain(arrays):
+            for fn in loop_fns:
+                arrays = fn(arrays)
+            return arrays
+
+        # per_loop_depth must equal the buffers' halo padding: exchange_halos
+        # indexes send/recv regions by depth, so a shallower exchange on a
+        # deeper-padded buffer would move the wrong columns.
+        return make_sharded_chain_step(
+            chain, mesh, "x", depth=D, per_loop=per_loop,
+            loop_fns=loop_fns, per_loop_depth=D, dim=1), per
+
+    @pytest.mark.parametrize("n_ranks", [2, 8])
+    @pytest.mark.parametrize("per_loop", [False, True])
+    def test_matches_reference_runtime(self, n_ranks, per_loop):
+        import jax
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.reference import run_chain_reference
+
+        u0, u, v, loops = self._loops()
+        run_chain_reference(loops)
+        expect = u.interior().copy()
+
+        step, per = self._sharded_step(n_ranks, per_loop)
+        D = self.DEPTH
+        padded = np.zeros((self.N, self.M + 2 * D), np.float32)
+        padded[:, D:-D] = u0
+        locs = [padded[:, r * per: r * per + per + 2 * D]
+                for r in range(n_ranks)]
+        mesh = _make_mesh(n_ranks)
+        garr = jax.device_put(np.concatenate(locs, 1),
+                              NamedSharding(mesh, P(None, "x")))
+        zeros = jax.device_put(np.zeros_like(np.concatenate(locs, 1)),
+                               NamedSharding(mesh, P(None, "x")))
+        res = np.asarray(step({"u": garr, "v": zeros})["u"])
+        W = per + 2 * D
+        got = np.concatenate(
+            [res[:, r * W + D: r * W + D + per] for r in range(n_ranks)], 1)
+        np.testing.assert_allclose(got, expect, rtol=1e-6, atol=1e-6)
+
+    def test_message_count_accounting(self):
+        """§5.2 policy trade-off, in numbers: the tiled policy's one deep
+        exchange vs the untiled policy's per-loop shallow exchanges."""
+        from repro.core.distributed import chain_message_count
+
+        tiled, per = self._sharded_step(2, per_loop=False)
+        untiled, _ = self._sharded_step(2, per_loop=True)
+        assert tiled.exchanges == 1
+        assert untiled.exchanges == 2
+        assert tiled.messages_per_array == chain_message_count(2, 1) == 2
+        assert untiled.messages_per_array == chain_message_count(
+            2, 1, n_loops=2, per_loop=True) == 4
+        assert untiled.messages_per_array > tiled.messages_per_array
+        # periodic rings close the loop: 2 extra wrap messages per exchange
+        assert chain_message_count(8, 3, periodic=True) == 48
+        assert chain_message_count(8, 3) == 42
 
 
 @pytest.mark.parametrize("script,token", [
