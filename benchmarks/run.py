@@ -350,17 +350,100 @@ def sim_smoke():
     }
 
 
+def verify_bench():
+    """Static verification sweep: every plan ``build_plan`` emits for the
+    three apps x {ram, spilled-host} tiers x {unsharded, sim:4 mesh} must
+    verify clean, and the plan fuzzer must catch every mutation it emits
+    (zero false negatives).  Returns per-config diagnostic counts; any
+    error-severity diagnostic or fuzzer miss fails the CI gate."""
+    from repro.apps.cloverleaf2d import CloverLeaf2D
+    from repro.apps.cloverleaf3d import CloverLeaf3D
+    from repro.apps.opensbli import OpenSBLI
+    from repro.core import Session, check_mutations, verify_plans
+    from repro.core.memory import P100_PCIE
+
+    makers = {
+        "cloverleaf2d": lambda: CloverLeaf2D(48, 32),
+        "cloverleaf3d": lambda: CloverLeaf3D(16, 48, 10),
+        "opensbli": lambda: OpenSBLI(24),
+    }
+    rows = []
+    fuzz_total = fuzz_missed = 0
+    for app_name, mk in makers.items():
+        for mesh in (None, "sim:4"):
+            for tier in ("ram", "spill"):
+                app = mk()
+                kw = dict(num_tiles=4)
+                if tier == "spill":
+                    kw["hw"] = P100_PCIE.with_(
+                        host_capacity=app.total_bytes() * 0.4)
+                else:
+                    kw["capacity_bytes"] = float("inf")
+                if mesh:
+                    kw["mesh"] = mesh
+                sess = Session("sim", **kw)
+                app.record_init(sess)
+                sess.queue.clear()
+                app.dt = 1e-4
+                app.record_timestep(sess)
+                plans = sess.plan()
+                res = verify_plans(plans)
+                # Fuzz the first (head) plan of each unsharded config —
+                # the mesh configs re-verify the same mutation classes
+                # dozens of times for little extra coverage.
+                if mesh is None:
+                    fz = check_mutations(plans[0])
+                    fuzz_total += len(fz)
+                    fuzz_missed += sum(not v for v in fz.values())
+                rows.append({
+                    "config": f"{app_name}/{tier}"
+                              + (f"/{mesh}" if mesh else ""),
+                    "plans": len(plans), "ops": res.ops,
+                    "errors": len(res.errors),
+                    "warnings": len(res.warnings),
+                    "diagnostics": [str(d) for d in res.diagnostics],
+                })
+    return {"configs": rows, "fuzz_mutations": fuzz_total,
+            "fuzz_missed": fuzz_missed}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tune", action="store_true",
                     help="include the Plan-IR autotuner section")
     ap.add_argument("--simulate", action="store_true",
                     help="sim-mode smoke only (fast; no data plane/Pallas)")
+    ap.add_argument("--verify", action="store_true",
+                    help="static plan verification sweep (apps x tiers x "
+                         "meshes) + fuzzer; exit 1 on any error diagnostic")
     args = ap.parse_args(argv)
 
     # Fresh clones may lack reports/ (and nested sections write artifacts
     # mid-run); create it up front instead of failing at the final dump.
     os.makedirs("reports", exist_ok=True)
+
+    if args.verify:
+        t0 = time.time()
+        print("== Plan verification sweep (apps x tiers x meshes) ==")
+        vb = verify_bench()
+        errors = 0
+        for r in vb["configs"]:
+            errors += r["errors"]
+            print(f"{r['config']},plans={r['plans']},ops={r['ops']},"
+                  f"errors={r['errors']},warnings={r['warnings']}")
+            for d in r["diagnostics"]:
+                print(f"  {d}")
+        print(f"fuzz,{vb['fuzz_mutations']} mutations,"
+              f"{vb['fuzz_missed']} missed")
+        with open("reports/bench_verify.json", "w") as f:
+            json.dump(vb, f, indent=1, default=float)
+        print(f"\nverify bench time: {time.time() - t0:.0f}s; "
+              f"results -> reports/bench_verify.json")
+        if errors or vb["fuzz_missed"]:
+            raise SystemExit(
+                f"plan verification FAILED: {errors} error diagnostic(s), "
+                f"{vb['fuzz_missed']} fuzzer false negative(s)")
+        return
 
     if args.simulate:
         import tempfile

@@ -38,6 +38,7 @@ from .plan import (
     HaloUnpack,
     PinUpload,
     Plan,
+    PlanError,
     PlanOp,
     Prefetch,
     SpillHome,
@@ -48,6 +49,14 @@ from .plan import (
     plans_from_json,
     plans_to_json,
 )
+from .verify import (
+    Diagnostic,
+    PlanVerificationError,
+    VerifyResult,
+    verify_plan,
+    verify_plans,
+)
+from .fuzz import Mutation, check_mutations, enumerate_mutations
 from .sharded import ShardedOutOfCoreExecutor, ShardingError
 from .store import (
     BackingStore,
@@ -122,10 +131,13 @@ __all__ = [
     "choose_num_tiles", "make_tile_schedule",
     "Codec", "register_codec", "get_codec", "available_codecs",
     "TransferEngine", "TransferError", "ResidencyManager", "ResidencyError",
-    "Plan", "PlanOp", "Upload", "Download", "Compute", "CarryEdge", "Elide",
+    "Plan", "PlanError", "PlanOp", "Upload", "Download", "Compute",
+    "CarryEdge", "Elide",
     "Evict", "Prefetch", "PinUpload", "WritebackPinned", "FetchHome",
     "SpillHome", "HaloPack", "HaloExchange", "HaloUnpack", "build_plan",
     "format_plan", "plans_to_json", "plans_from_json",
+    "Diagnostic", "VerifyResult", "PlanVerificationError", "verify_plan",
+    "verify_plans", "Mutation", "enumerate_mutations", "check_mutations",
     "DeviceMesh", "HaloSpec", "MeshError", "ShardGeometry", "parse_mesh",
     "ShardedOutOfCoreExecutor", "ShardingError",
     "BackingStore", "RamStore", "MmapStore", "ChunkedStore", "StoreConfig",

@@ -69,6 +69,10 @@ class OOCConfig:
     # Host-RAM budget for dataset home copies; chains whose working set
     # exceeds it get FetchHome/SpillHome ops against the disk-backed stores.
     host_capacity: Optional[float] = None    # default: hw.host_capacity
+    # Statically verify every plan before interpreting it
+    # (repro.core.verify); error-severity diagnostics raise
+    # PlanVerificationError instead of executing a corrupting stream.
+    debug: bool = False
 
     @property
     def capacity(self) -> float:
@@ -359,6 +363,11 @@ class OutOfCoreExecutor:
                 f"(plan {ir.num_tiles} tiles x {ir.num_slots} slots, dim "
                 f"{ir.tiled_dim}; config {cp.ir.num_tiles} x "
                 f"{cp.ir.num_slots}, dim {cp.ir.tiled_dim})")
+        if cfg.debug:
+            from .verify import verify_plan  # function-level: avoids a cycle
+
+            verify_plan(ir).raise_for_errors(
+                f"chain {ir.sig_hash[:12]} (debug mode)")
         tx = self.transfer
         tx_before = tx.snapshot()
         # Disk-tier accounting: on data-plane runs the backing stores count

@@ -21,7 +21,7 @@ old inline ``sim``/real branches are now one code path with data hooks.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -44,7 +44,7 @@ from .plan import (
     WritebackPinned,
 )
 from .tiling import Interval
-from .transfer import ResidencyManager
+from .transfer import ResidencyManager, Slot
 from .transfer.engine import DISK, DOWN, UP
 
 
@@ -247,7 +247,8 @@ class LedgerInterpreter:
         self.disk_written += op.raw
         self.stage_spill_home(op, deps)
 
-    def stage_spill_home(self, op: SpillHome, deps) -> Optional[int]:
+    def stage_spill_home(self, op: SpillHome,
+                         deps: Tuple[int, ...]) -> Optional[int]:
         return self.ledger.add(3, "spill_home", op.raw,
                                self.ledger.t_disk(op.raw), deps)
 
@@ -287,7 +288,8 @@ class LedgerInterpreter:
         self.last_upload_eid = eid
 
     # -- staging --------------------------------------------------------------
-    def spec_lookup(self, name: str, iv: Interval):
+    def spec_lookup(self, name: str,
+                    iv: Interval) -> Tuple[Interval, Optional[Any]]:
         """Resolve a speculative-prefetch hit for upload piece ``iv``:
         returns ``(miss_part, restore)`` — the sub-interval still needing a
         home upload, and the restore token (always None without a data
@@ -333,7 +335,10 @@ class LedgerInterpreter:
             self.tile_up_eid[op.tile] = eid
             self.last_upload_eid = eid
 
-    def stage_upload(self, op, slot, org, items, restores, raw, deps):
+    def stage_upload(self, op: Upload, slot: Slot, org: Dict[str, int],
+                     items: List[Tuple[str, Interval]],
+                     restores: List[Tuple],
+                     raw: int, deps: Tuple[int, ...]) -> Optional[int]:
         self.uploaded += raw
         wire = sum(self._wire(name, self._nbytes(name, iv.lo, iv.hi))
                    for name, iv in items)
@@ -360,7 +365,7 @@ class LedgerInterpreter:
             for lo, hi in rows:
                 self.rm.mark_dirty(slot, name, lo, hi)
 
-    def execute_tile(self, op: Compute, slot) -> None:
+    def execute_tile(self, op: Compute, slot: Slot) -> None:
         pass
 
     # -- edge carry -----------------------------------------------------------
@@ -380,7 +385,8 @@ class LedgerInterpreter:
         self.last_compute_eid = self.ledger.add(
             0, "edge", op.nbytes, self.ledger.t_dd(2 * op.nbytes), tuple(deps))
 
-    def copy_edges(self, op: CarryEdge, slot, dst, next_org) -> None:
+    def copy_edges(self, op: CarryEdge, slot: Slot, dst: Slot,
+                   next_org: Dict[str, int]) -> None:
         pass
 
     # -- retire ---------------------------------------------------------------
@@ -397,7 +403,8 @@ class LedgerInterpreter:
         self.last_download_eid[slot.index] = eid
         self.tile_down_eid[op.tile] = eid
 
-    def stage_download(self, op: Download, slot, deps) -> int:
+    def stage_download(self, op: Download, slot: Slot,
+                       deps: Tuple[int, ...]) -> int:
         wire = sum(self._wire(name, self._nbytes(name, lo, hi))
                    for name, lo, hi in op.items)
         self.downloaded_wire += wire
@@ -444,7 +451,8 @@ class LedgerInterpreter:
                     if self.last_compute_eid is not None else ())
             self.ledger.add(2, "download", wire, self.ledger.t_down(wire), deps)
 
-    def flush_pinned(self, name, rows, nb, wire) -> Tuple[int, int]:
+    def flush_pinned(self, name: str, rows: Tuple[Tuple[int, int], ...],
+                     nb: int, wire: int) -> Tuple[int, int]:
         return nb, wire
 
 
@@ -468,8 +476,11 @@ class DataPlaneInterpreter(LedgerInterpreter):
     and patched with achieved post-codec wire bytes after the engine drains.
     """
 
-    def __init__(self, plan: Plan, hw: HardwareModel, *, rm, spec, cp, tx,
-                 codecs, halo_runtime=None):
+    def __init__(self, plan: Plan, hw: HardwareModel, *,
+                 rm: ResidencyManager, spec: SpecState, cp: Any,
+                 tx: Any, codecs: Dict[str, Any],
+                 halo_runtime: Optional[Callable[[HaloExchange], None]]
+                 = None):
         super().__init__(plan, hw, rm=rm, spec=spec,
                          datasets=cp.info.datasets)
         # Collective halo-exchange hook (sharded execution): the mesh-owning
@@ -495,14 +506,16 @@ class DataPlaneInterpreter(LedgerInterpreter):
         self._prefetch_armed = False
 
     # -- home region helpers (store-routed: ram, mmap and chunked homes) -----
-    def _dat_np_region(self, dat, iv: Interval) -> np.ndarray:
+    def _dat_np_region(self, dat: Any, iv: Interval) -> np.ndarray:
         return dat.read_rows(self.td, iv.lo, iv.hi)
 
-    def _write_np_region(self, dat, iv: Interval, values: np.ndarray) -> None:
+    def _write_np_region(self, dat: Any, iv: Interval,
+                         values: np.ndarray) -> None:
         dat.write_rows(self.td, iv.lo, iv.hi, values)
 
     @staticmethod
-    def _slot_slice(arr, lo: int, hi: int, td: int):
+    def _slot_slice(arr: Any, lo: int, hi: int,
+                    td: int) -> Tuple[slice, ...]:
         idx = [slice(None)] * arr.ndim
         idx[td] = slice(lo, hi)
         return tuple(idx)
@@ -599,7 +612,7 @@ class DataPlaneInterpreter(LedgerInterpreter):
         items = [(datasets[name], Interval(lo, hi))
                  for name, lo, hi in op.items]
 
-        def task():
+        def task() -> Tuple[int, int]:
             read = 0
             for dat, iv in items:
                 read += dat.prefetch_rows(td, iv.lo, iv.hi)
@@ -612,7 +625,8 @@ class DataPlaneInterpreter(LedgerInterpreter):
         self.patches.append((eid, handle, DISK))
         return eid
 
-    def stage_spill_home(self, op: SpillHome, deps) -> Optional[int]:
+    def stage_spill_home(self, op: SpillHome,
+                         deps: Tuple[int, ...]) -> Optional[int]:
         """Host -> disk retirement on the DISK lane, gated on the download
         task that lands the rows home (handle dep, mirroring the ledger
         event's dep on the download event)."""
@@ -622,7 +636,7 @@ class DataPlaneInterpreter(LedgerInterpreter):
                  for name, lo, hi in op.items]
         dh = self.down_handles.get(op.tile)
 
-        def task():
+        def task() -> Tuple[int, int]:
             written = 0
             for dat, iv in items:
                 written += dat.spill_rows(td, iv.lo, iv.hi)
@@ -635,7 +649,8 @@ class DataPlaneInterpreter(LedgerInterpreter):
         return eid
 
     # -- staging --------------------------------------------------------------
-    def spec_lookup(self, name: str, iv: Interval):
+    def spec_lookup(self, name: str,
+                    iv: Interval) -> Tuple[Interval, Optional[Any]]:
         """Data-plane prefetch resolution: a hit must be backed by a captured
         device array whose dataset identity/version still matches home —
         otherwise it degrades to a full miss (stage everything), never to
@@ -655,7 +670,10 @@ class DataPlaneInterpreter(LedgerInterpreter):
             return iv, None  # stale capture: stage everything from home
         return iv, None
 
-    def _make_upload_task(self, slot, org, items, restores):
+    def _make_upload_task(self, slot: Slot, org: Dict[str, int],
+                          items: List[Tuple[str, Interval]],
+                          restores: List[Tuple]
+                          ) -> Callable[[], Tuple[int, int]]:
         import jax.numpy as jnp
 
         td = self.td
@@ -664,7 +682,7 @@ class DataPlaneInterpreter(LedgerInterpreter):
         slot_slice = self._slot_slice
         dat_np_region = self._dat_np_region
 
-        def task():
+        def task() -> Tuple[int, int]:
             raw = wire = 0
             # Prefetch restores: device-resident captures from the last
             # chain's speculative upload — no link traffic (it was charged
@@ -696,7 +714,10 @@ class DataPlaneInterpreter(LedgerInterpreter):
 
         return task
 
-    def stage_upload(self, op, slot, org, items, restores, raw, deps):
+    def stage_upload(self, op: Upload, slot: Slot, org: Dict[str, int],
+                     items: List[Tuple[str, Interval]],
+                     restores: List[Tuple],
+                     raw: int, deps: Tuple[int, ...]) -> Optional[int]:
         # Home rows a still-pending download is writing back must land
         # before this staging read (cross-tile safety net; the footprint
         # algebra keeps these disjoint in practice).
@@ -722,7 +743,7 @@ class DataPlaneInterpreter(LedgerInterpreter):
         return eid
 
     # -- compute --------------------------------------------------------------
-    def execute_tile(self, op: Compute, slot) -> None:
+    def execute_tile(self, op: Compute, slot: Slot) -> None:
         handle = self.up_handles.get(op.tile)
         if handle is not None:
             handle.wait()   # tile's staging must have landed
@@ -745,7 +766,8 @@ class DataPlaneInterpreter(LedgerInterpreter):
                 self.reductions[name] = np.asarray(val)
 
     # -- edge carry -----------------------------------------------------------
-    def copy_edges(self, op: CarryEdge, slot, dst, next_org) -> None:
+    def copy_edges(self, op: CarryEdge, slot: Slot, dst: Slot,
+                   next_org: Dict[str, int]) -> None:
         td = self.td
         org = self.origins[op.tile]
         for name, lo, hi in op.items:
@@ -759,14 +781,17 @@ class DataPlaneInterpreter(LedgerInterpreter):
                                      hi - next_org[name], td)].set(vals)
 
     # -- download -------------------------------------------------------------
-    def _make_download_task(self, arrays, org, items):
+    def _make_download_task(self, arrays: Dict[str, Any],
+                            org: Dict[str, int],
+                            items: List[Tuple[str, Interval]]
+                            ) -> Callable[[], Tuple[int, int]]:
         td = self.td
         info = self.info
         codecs = self.codecs
         slot_slice = self._slot_slice
         write_np_region = self._write_np_region
 
-        def task():
+        def task() -> Tuple[int, int]:
             raw = wire = 0
             for name, iv in items:
                 dat = info.datasets[name]
@@ -781,7 +806,8 @@ class DataPlaneInterpreter(LedgerInterpreter):
 
         return task
 
-    def stage_download(self, op: Download, slot, deps) -> int:
+    def stage_download(self, op: Download, slot: Slot,
+                       deps: Tuple[int, ...]) -> int:
         org = self.origins[op.tile]
         items = [(name, Interval(lo, hi)) for name, lo, hi in op.items]
         # Snapshot the arrays: a later tile's upload functionally replaces
@@ -803,7 +829,8 @@ class DataPlaneInterpreter(LedgerInterpreter):
         return eid
 
     # -- pinned flush ---------------------------------------------------------
-    def flush_pinned(self, name, rows, nb, wire) -> Tuple[int, int]:
+    def flush_pinned(self, name: str, rows: Tuple[Tuple[int, int], ...],
+                     nb: int, wire: int) -> Tuple[int, int]:
         dat = self.info.datasets[name]
         arr = self.pinned_arrays[name]
         origin = self.pinned_origins[name]

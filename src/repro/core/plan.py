@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import hashlib
 import json
-from dataclasses import dataclass, fields
+from dataclasses import MISSING, dataclass, fields
 from typing import ClassVar, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from .dependency import ChainInfo, _merge, chain_signature
@@ -43,6 +43,13 @@ from .transfer import resolve_codecs
 
 Item = Tuple[str, int, int]          # (dataset, lo, hi)
 Rows = Tuple[Tuple[int, int], ...]   # merged half-open row intervals
+
+
+class PlanError(ValueError):
+    """A plan document is malformed: bad JSON, unsupported version, an
+    unknown op kind, or an op/meta field mismatch.  The message names the
+    offending op index and field so a truncated or version-skewed export
+    is diagnosable without reading the raw JSON."""
 
 
 # -- the instruction set ----------------------------------------------------------
@@ -374,21 +381,60 @@ class Plan:
 
     @classmethod
     def from_json(cls, text: str) -> "Plan":
-        doc = json.loads(text)
+        try:
+            doc = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise PlanError(f"plan document is not valid JSON "
+                            f"(truncated export?): {e}") from e
+        if not isinstance(doc, dict):
+            raise PlanError(
+                f"plan document must be a JSON object, got "
+                f"{type(doc).__name__}")
         # v2 documents load fine: every v3 addition (device/mesh_devices/
         # shard_dim/warm meta, halo ops) defaults to the unsharded case.
         if doc.get("version") not in (2, PLAN_JSON_VERSION):
-            raise ValueError(
+            raise PlanError(
                 f"unsupported plan version {doc.get('version')!r} "
-                f"(expected {PLAN_JSON_VERSION})")
+                f"(expected 2 or {PLAN_JSON_VERSION})")
+        for key in ("meta", "ops"):
+            if key not in doc:
+                raise PlanError(f"plan document has no {key!r} section")
+        if not isinstance(doc["meta"], dict):
+            raise PlanError("plan 'meta' section must be a JSON object")
         meta = {k: _tuplify(v) for k, v in doc["meta"].items()}
-        ops = []
-        for entry in doc["ops"]:
+        ops: List[PlanOp] = []
+        for i, entry in enumerate(doc["ops"]):
+            if not isinstance(entry, dict) or "op" not in entry:
+                raise PlanError(
+                    f"op {i}: not an op object (missing 'op' field): "
+                    f"{entry!r}")
             entry = dict(entry)
-            op_cls = OP_TYPES.get(entry.pop("op"))
+            kind = entry.pop("op")
+            op_cls = OP_TYPES.get(kind)
             if op_cls is None:
-                raise ValueError(f"unknown plan op kind in JSON: {entry}")
+                raise PlanError(
+                    f"op {i}: unknown op kind {kind!r} "
+                    f"(known: {', '.join(sorted(OP_TYPES))})")
+            want = {f.name for f in fields(op_cls)}
+            got = set(entry)
+            if got != want:
+                missing = ", ".join(sorted(want - got)) or "-"
+                extra = ", ".join(sorted(got - want)) or "-"
+                raise PlanError(
+                    f"op {i} ({kind!r}): field mismatch — missing: "
+                    f"{missing}; unexpected: {extra}")
             ops.append(op_cls(**{k: _tuplify(v) for k, v in entry.items()}))
+        want_meta = {f.name for f in fields(cls)} - {"ops"}
+        required = {f.name for f in fields(cls)
+                    if f.default is MISSING
+                    and f.default_factory is MISSING} - {"ops"}
+        extra_meta = set(meta) - want_meta
+        missing_meta = required - set(meta)
+        if extra_meta or missing_meta:
+            raise PlanError(
+                f"plan meta field mismatch — missing: "
+                f"{', '.join(sorted(missing_meta)) or '-'}; unexpected: "
+                f"{', '.join(sorted(extra_meta)) or '-'}")
         return cls(ops=tuple(ops), **meta)
 
 
@@ -405,7 +451,14 @@ def plans_to_json(plans: Sequence[Plan], indent: Optional[int] = None) -> str:
 
 
 def plans_from_json(text: str) -> List[Plan]:
-    return [Plan.from_json(json.dumps(doc)) for doc in json.loads(text)]
+    try:
+        docs = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise PlanError(f"plan-list document is not valid JSON "
+                        f"(truncated export?): {e}") from e
+    if not isinstance(docs, list):
+        raise PlanError("plan-list document must be a JSON array of plans")
+    return [Plan.from_json(json.dumps(doc)) for doc in docs]
 
 
 def chain_sig_hash(info: ChainInfo) -> str:
@@ -728,7 +781,10 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
         + (", prefetch" if plan.prefetch else "")
         + (", disk tier (host oversubscribed)" if plan.spill_home else "")
         + (f", device {plan.device}/{plan.mesh_devices}"
-           f" (shard dim {plan.shard_dim})" if plan.mesh_devices > 1 else ""),
+           f" (shard dim {plan.shard_dim})" if plan.mesh_devices > 1 else "")
+        + (f", warm {' '.join(plan.warm)}" if plan.warm else "")
+        + (f", keep-live {' '.join(plan.keep_live)}"
+           if plan.keep_live else ""),
     ]
     cur_tile = None
     for op in plan.ops:
@@ -737,13 +793,17 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
             cur_tile = t
             lines.append(f"  tile {t} -> slot {t % plan.num_slots}")
         if isinstance(op, HaloPack):
-            lines.append(f"  halo-pack   {len(op.names)} dats"
+            names = " ".join(op.names[:4]) + (
+                f" +{len(op.names) - 4} more" if len(op.names) > 4 else "")
+            lines.append(f"  halo-pack   {len(op.names)} dats ({names})"
                          f"  {_mb(op.nbytes)}")
         elif isinstance(op, HaloExchange):
             lines.append(f"  halo-exchange depth {op.depth},"
                          f" {op.messages} msgs, {_mb(op.nbytes)} (net)")
         elif isinstance(op, HaloUnpack):
-            lines.append(f"  halo-unpack {len(op.names)} dats"
+            names = " ".join(op.names[:4]) + (
+                f" +{len(op.names) - 4} more" if len(op.names) > 4 else "")
+            lines.append(f"  halo-unpack {len(op.names)} dats ({names})"
                          f"  {_mb(op.nbytes)}")
         elif isinstance(op, PinUpload):
             names = " ".join(n for n, _ in op.entries)

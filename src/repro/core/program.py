@@ -83,6 +83,10 @@ class ExecutionConfig:
     mesh: Union[None, int, str, "DeviceMesh"] = None  # noqa: F821
     shard_dim: int = 1
     halo_depth: Optional[int] = None
+    # -- static verification (repro.core.verify) ------------------------------
+    # Verify every plan before interpreting it; error-severity diagnostics
+    # raise PlanVerificationError instead of executing a corrupting stream.
+    debug: bool = False
 
     def __post_init__(self) -> None:
         if isinstance(self.hw, str):
@@ -108,6 +112,7 @@ class ExecutionConfig:
             transfer=self.transfer, codec=self.codec,
             pinned=tuple(self.pinned),
             host_capacity=self.host_capacity,
+            debug=self.debug,
         )
         kw.update(overrides)
         return OOCConfig(**kw)
@@ -587,12 +592,27 @@ class Session:
                     + self._plan_split(ex, tail, keep_live,
                                        warm | head_writes))
 
-    def explain(self, loops=None) -> str:
+    def verify(self, loops=None):
+        """Statically verify the plans for the queued loops (or ``loops``)
+        without executing anything.  Returns a
+        :class:`~repro.core.verify.VerifyResult` — every chain's stream is
+        abstract-interpreted for residency/dirty-loss/halo soundness and
+        transfer-lane ordering, and on a sharded session the per-device
+        plans are cross-checked for exchange consistency.
+        ``session.verify().ok`` is the machine-checkable answer to "will
+        this step's plans corrupt data"."""
+        from .verify import verify_plans
+
+        return verify_plans(self.plan(loops))
+
+    def explain(self, loops=None, *, verify: bool = False) -> str:
         """Human-readable per-tile op listing for the queued loops (or
         ``loops``): staging/compute/carry/download per tile with modelled
         bytes, op totals, and the ledger-modelled makespan per chain.  On a
         sharded session every device's stream is listed (with its halo ops
-        and per-device makespan), followed by a mesh summary line."""
+        and per-device makespan), followed by a mesh summary line.  With
+        ``verify=True`` the static verifier's diagnostic summary is
+        appended."""
         from .plan import format_plan
 
         plans = self.plan(loops)
@@ -633,6 +653,10 @@ class Session:
                 f"mesh summary: per-device makespans {devs}; critical "
                 f"device {max(per_dev.values()) * 1e3:.3f} ms; halo "
                 f"{msgs} msgs / {nbytes / 1e6:.3f} MB")
+        if verify:
+            from .verify import verify_plans
+
+            blocks.append(verify_plans(plans).summary())
         return "\n\n".join(blocks)
 
     def tune(self, loops=None, *, apply: bool = False, repeats: int = 2,

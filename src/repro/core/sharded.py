@@ -585,6 +585,14 @@ class ShardedOutOfCoreExecutor:
         state = self._state_for(loops)
         segments = split_segments(loops, self.shard_dim, state.skirt)
         sim = self.cfg.simulate_only
+        if self.cfg.debug:
+            # Per-plan verification happens inside each inner executor; this
+            # adds the cross-device pass (exchange depth/message consistency
+            # over every per-device plan of every segment).
+            from .verify import verify_plans  # function-level: avoids a cycle
+
+            verify_plans(self.plan_chain(loops, keep_live).ir
+                         ).raise_for_errors("sharded chain (debug mode)")
         if not sim:
             self._scatter(state, sorted(
                 {a.dat.name for lp in loops for a in lp.args}))

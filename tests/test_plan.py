@@ -367,3 +367,133 @@ class TestReductionRetention:
         assert t2 == pytest.approx(2 * t1, rel=1e-5)
         # the old result is gone after the new flush, not accumulated
         assert float(sess.reduction("total")) == t2
+
+
+class TestPlanErrors:
+    """Satellite: Plan.from_json raises typed PlanError naming the offending
+    op/field instead of bare KeyError/TypeError on malformed documents."""
+
+    def _plan(self):
+        sess = Session("sim", num_tiles=4, capacity_bytes=float("inf"))
+        heat_loops(sess, 40, 24, 2)
+        (plan,) = sess.plan()
+        return plan
+
+    def test_truncated_json(self):
+        from repro.core import PlanError
+
+        text = self._plan().to_json()
+        with pytest.raises(PlanError, match="truncated"):
+            Plan.from_json(text[: len(text) // 2])
+
+    def test_version_skew(self):
+        from repro.core import PlanError
+
+        doc = json.loads(self._plan().to_json())
+        doc["version"] = 1
+        with pytest.raises(PlanError, match="unsupported plan version 1"):
+            Plan.from_json(json.dumps(doc))
+
+    def test_missing_op_field_names_index(self):
+        from repro.core import PlanError
+
+        doc = json.loads(self._plan().to_json())
+        del doc["ops"][3]["op"]
+        with pytest.raises(PlanError, match="op 3"):
+            Plan.from_json(json.dumps(doc))
+
+    def test_unknown_op_kind(self):
+        from repro.core import PlanError
+
+        doc = json.loads(self._plan().to_json())
+        doc["ops"][0]["op"] = "teleport"
+        with pytest.raises(PlanError, match="unknown op kind 'teleport'"):
+            Plan.from_json(json.dumps(doc))
+
+    def test_op_field_mismatch_names_fields(self):
+        from repro.core import PlanError
+
+        doc = json.loads(self._plan().to_json())
+        entry = next(e for e in doc["ops"] if e["op"] == "compute")
+        del entry["flops"]
+        entry["warp"] = 9
+        with pytest.raises(PlanError, match="missing: flops.*unexpected: warp"):
+            Plan.from_json(json.dumps(doc))
+
+    def test_meta_field_mismatch(self):
+        from repro.core import PlanError
+
+        doc = json.loads(self._plan().to_json())
+        del doc["meta"]["num_tiles"]
+        with pytest.raises(PlanError, match="missing: num_tiles"):
+            Plan.from_json(json.dumps(doc))
+
+    def test_missing_sections(self):
+        from repro.core import PlanError
+
+        with pytest.raises(PlanError, match="no 'ops' section"):
+            Plan.from_json('{"version": 3, "meta": {}}')
+        with pytest.raises(PlanError, match="must be a JSON object"):
+            Plan.from_json('[1, 2]')
+
+    def test_plans_from_json_not_a_list(self):
+        from repro.core import PlanError
+
+        with pytest.raises(PlanError, match="JSON array"):
+            plans_from_json('{"version": 3}')
+
+
+class TestVerdictStability:
+    """Satellite: the verifier's verdict is a plan property, so it must
+    survive JSON round-trips — including v2 documents loaded under v3."""
+
+    def _plans(self, app_name):
+        from test_verify import _app_plans
+
+        return _app_plans(app_name, "ram", None)
+
+    @pytest.mark.parametrize("app_name",
+                             ["cloverleaf2d", "cloverleaf3d", "opensbli"])
+    def test_roundtrip_verdict_stable(self, app_name):
+        from repro.core import verify_plans
+
+        plans = self._plans(app_name)
+        before = verify_plans(plans)
+        back = plans_from_json(plans_to_json(plans))
+        after = verify_plans(back)
+        assert before.ok and after.ok
+        assert before.diagnostics == after.diagnostics
+
+    def test_v2_document_under_v3_same_verdict(self):
+        from repro.core import verify_plan
+
+        (plan,) = self._plans("cloverleaf2d")
+        before = verify_plan(plan)
+        doc = json.loads(plan.to_json())
+        doc["version"] = 2
+        for key in ("device", "mesh_devices", "shard_dim", "warm"):
+            doc["meta"].pop(key, None)
+        v2 = Plan.from_json(json.dumps(doc))
+        assert v2.mesh_devices == 1 and v2.warm == ()
+        after = verify_plan(v2)
+        assert before.ok and after.ok
+        assert ([d.category for d in before.diagnostics]
+                == [d.category for d in after.diagnostics])
+
+    def test_corrupt_plan_verdict_survives_roundtrip(self):
+        """An *unsound* plan must stay flagged after export/import."""
+        from repro.core import verify_plan
+
+        (plan,) = self._plans("cloverleaf2d")
+        import dataclasses
+
+        cut = tuple(op for op in plan.ops
+                    if not (isinstance(op, Download)
+                            and op.tile == plan.num_tiles - 1))
+        bad = dataclasses.replace(plan, ops=cut)
+        before = verify_plan(bad)
+        assert not before.ok
+        back = Plan.from_json(bad.to_json())
+        after = verify_plan(back)
+        assert ({d.category for d in before.errors}
+                == {d.category for d in after.errors})

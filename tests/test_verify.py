@@ -1,0 +1,381 @@
+"""Static plan verification: PR 5 hazard regressions, clean-plan sweeps
+over the apps/tiers/meshes, the transfer-graph checks, and the plan fuzzer's
+zero-false-negative contract."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Compute,
+    Download,
+    Elide,
+    ExecutionConfig,
+    HaloExchange,
+    OOCConfig,
+    OutOfCoreExecutor,
+    Plan,
+    PlanVerificationError,
+    Session,
+    Upload,
+    check_mutations,
+    enumerate_mutations,
+    verify_plan,
+    verify_plans,
+)
+from repro.core.memory import P100_PCIE
+from repro.core.verify import find_cycle
+
+from test_plan import heat_loops
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# -- hand-built plans -------------------------------------------------------------
+
+
+def mini_plan(ops, *, num_tiles=1, num_slots=2, cyclic=False,
+              keep_live=(), spill_home=False, device=0, mesh_devices=1):
+    return Plan(
+        num_tiles=num_tiles, num_slots=num_slots, tiled_dim=0,
+        early_submit=num_slots >= 2, cyclic=cyclic, prefetch=False,
+        spill_home=spill_home, slot_bytes=0, pinned_bytes=0, loop_bytes=0,
+        sig_hash="t" * 40,
+        row_bytes=(("u", 8), ("tmp", 8)),
+        codec_names=(("u", "identity"), ("tmp", "identity")),
+        codec_ratios=(("u", 1.0), ("tmp", 1.0)),
+        keep_live=tuple(keep_live),
+        tile_origins=((),) * num_tiles,
+        ops=tuple(ops), device=device, mesh_devices=mesh_devices)
+
+
+def up(t, s, items, **kw):
+    return Upload(tile=t, slot=s, items=tuple(items), raw=kw.get("raw", 0),
+                  wire=kw.get("wire", 0))
+
+
+def comp(t, s, writes):
+    return Compute(tile=t, slot=s, nbytes=0, flops=0,
+                   writes=tuple((n, tuple(r)) for n, r in writes),
+                   pinned_writes=())
+
+
+def down(t, s, items):
+    return Download(tile=t, slot=s, items=tuple(items), raw=0, wire=0)
+
+
+class TestPR5HazardRegressions:
+    def test_warm_upload_clobber_is_uninit_download_error(self):
+        """PR 5 hazard (a): a segmented chain's full-width download shipping
+        slot rows that were never staged nor written — home halo columns
+        get clobbered with zero-initialised slot content."""
+        plan = mini_plan([
+            up(0, 0, [("u", 0, 8)]),
+            comp(0, 0, [("u", [(0, 8)])]),
+            down(0, 0, [("u", -2, 10)]),     # wider than staged+written
+        ], num_tiles=1)
+        r = verify_plan(plan)
+        errs = [d for d in r.errors if d.category == "uninit-download"]
+        assert errs, r.summary()
+        ivs = {d.interval for d in errs}
+        assert (-2, 0) in ivs and (8, 10) in ivs
+        assert all(d.dataset == "u" for d in errs)
+
+    def test_stale_cross_segment_elision_is_flagged(self):
+        """PR 5 hazard (b): a §4.1 elision applied to a dataset the chain's
+        remainder still reads — both as the keep_live contract violation and
+        as the stale home read the next segment's upload performs."""
+        plan = mini_plan([
+            up(0, 0, [("u", 0, 8)]),
+            comp(0, 0, [("u", [(0, 8)])]),
+            Elide(tile=0, slot=0, items=(("u", 0, 8),), rows=8),
+            up(1, 1, [("u", 4, 12)]),        # reads home rows 4..8: stale
+            comp(1, 1, [("u", [(8, 12)])]),
+            down(1, 1, [("u", 8, 12)]),
+        ], num_tiles=2, cyclic=True, keep_live=("u",))
+        r = verify_plan(plan)
+        cats = {d.category for d in r.errors}
+        assert "illegal-elide" in cats, r.summary()
+        stale = [d for d in r.errors if d.category == "stale-read"]
+        assert stale and stale[0].interval == (4, 8)
+
+    def test_elide_without_cyclic_contract_is_error(self):
+        plan = mini_plan([
+            up(0, 0, [("tmp", 0, 8)]),
+            comp(0, 0, [("tmp", [(0, 8)])]),
+            Elide(tile=0, slot=0, items=(("tmp", 0, 8),), rows=8),
+        ], cyclic=False)
+        assert any(d.category == "illegal-elide" for d in verify_plan(plan).errors)
+
+    def test_dropped_writeback_is_dirty_loss(self):
+        plan = mini_plan([
+            up(0, 0, [("u", 0, 8)]),
+            comp(0, 0, [("u", [(0, 8)])]),
+        ])
+        errs = verify_plan(plan).errors
+        assert any(d.category == "dirty-loss" and d.dataset == "u"
+                   for d in errs)
+
+
+class TestStreamChecks:
+    def test_download_before_compute_is_race(self):
+        plan = mini_plan([
+            up(0, 0, [("u", 0, 8)]),
+            down(0, 0, [("u", 0, 8)]),
+            comp(0, 0, [("u", [(0, 8)])]),
+        ])
+        r = verify_plan(plan)
+        assert any(d.category == "missing-dep" for d in r.errors)
+
+    def test_slot_conflict(self):
+        plan = mini_plan([
+            up(0, 1, [("u", 0, 8)]),         # tile 0 must use slot 0
+            comp(0, 1, [("u", [(0, 8)])]),
+            down(0, 1, [("u", 0, 8)]),
+        ])
+        assert any(d.category == "slot-conflict"
+                   for d in verify_plan(plan).errors)
+
+    def test_missing_ops_flagged(self):
+        plan = mini_plan([up(0, 0, [("u", 0, 8)])], num_tiles=2)
+        cats = [d.category for d in verify_plan(plan).errors]
+        assert cats.count("missing-op") >= 2   # t0 compute, t1 upload+compute
+
+    def test_unknown_dataset(self):
+        plan = mini_plan([up(0, 0, [("ghost", 0, 8)])])
+        assert any(d.category == "unknown-dataset"
+                   for d in verify_plan(plan).errors)
+
+    def test_find_cycle(self):
+        assert find_cycle(3, [(0, 1), (1, 2)]) is None
+        cyc = find_cycle(3, [(0, 1), (1, 2), (2, 0)])
+        assert cyc is not None and len(set(cyc[:-1])) == 3
+
+    def test_halo_depth_insufficient(self):
+        plan = mini_plan([
+            dataclasses.replace(
+                HaloExchange(depth=1, messages=2, nbytes=64)),
+            up(0, 0, [("u", -3, 8)]),        # consumes 3 skirt rows
+            comp(0, 0, [("u", [(0, 8)])]),
+            down(0, 0, [("u", 0, 8)]),
+        ], device=1, mesh_devices=4)
+        r = verify_plan(plan)
+        # pack missing -> halo-order; depth 1 < reach 3 -> halo-depth
+        assert any(d.category == "halo-depth" for d in r.errors), r.summary()
+
+    def test_exchange_mismatch_across_devices(self):
+        sess = Session("sim", num_tiles=4, capacity_bytes=float("inf"),
+                       mesh="sim:4")
+        heat_loops(sess, 48, 24, 2)
+        plans = sess.plan()
+        assert verify_plans(plans).ok
+        # Skew one device's exchange depth: neighbours now disagree on how
+        # many rows cross the wire.
+        tampered = []
+        bumped = False
+        for p in plans:
+            if not bumped and p.mesh_devices > 1 and p.device == 1:
+                ops = tuple(
+                    dataclasses.replace(op, depth=op.depth + 1)
+                    if isinstance(op, HaloExchange) else op
+                    for op in p.ops)
+                p = dataclasses.replace(p, ops=ops)
+                bumped = True
+            tampered.append(p)
+        assert bumped
+        r = verify_plans(tampered)
+        assert any(d.category == "exchange-mismatch" for d in r.errors)
+
+
+# -- every real plan verifies clean ------------------------------------------------
+
+
+def _app_plans(app_name, tier, mesh):
+    from repro.apps.cloverleaf2d import CloverLeaf2D
+    from repro.apps.cloverleaf3d import CloverLeaf3D
+    from repro.apps.opensbli import OpenSBLI
+
+    app = {"cloverleaf2d": lambda: CloverLeaf2D(48, 32),
+           "cloverleaf3d": lambda: CloverLeaf3D(16, 48, 10),
+           "opensbli": lambda: OpenSBLI(24)}[app_name]()
+    kw = {"num_tiles": 4}
+    if tier == "spill":
+        kw["hw"] = P100_PCIE.with_(host_capacity=app.total_bytes() * 0.4)
+    else:
+        kw["capacity_bytes"] = float("inf")
+    if mesh:
+        kw["mesh"] = mesh
+    sess = Session("sim", **kw)
+    app.record_init(sess)
+    sess.queue.clear()
+    app.dt = 1e-4
+    app.record_timestep(sess)
+    return sess.plan()
+
+
+@pytest.mark.parametrize("app_name",
+                         ["cloverleaf2d", "cloverleaf3d", "opensbli"])
+@pytest.mark.parametrize("tier", ["ram", "spill"])
+@pytest.mark.parametrize("mesh", [None, "sim:4"])
+def test_all_app_plans_verify_clean(app_name, tier, mesh):
+    plans = _app_plans(app_name, tier, mesh)
+    assert plans
+    r = verify_plans(plans)
+    assert r.ok and not r.warnings, r.summary()
+
+
+def test_segmented_warm_chain_verifies_clean():
+    """The MemoryError-split path: warm tail segments with keep_live — the
+    exact territory of both PR 5 hazards — must verify clean."""
+    ex = OutOfCoreExecutor(OOCConfig(capacity_bytes=4500, cyclic=True))
+    sess = Session(backend=ex)
+    heat_loops(sess, 48, 10, 16)
+    plans = sess.plan()
+    assert len(plans) > 1 and any(p.warm for p in plans)
+    r = verify_plans(plans)
+    assert r.ok and not r.warnings, r.summary()
+
+
+# -- session / executor wiring -----------------------------------------------------
+
+
+class TestWiring:
+    def test_session_verify_and_explain(self):
+        sess = Session("sim", num_tiles=4, capacity_bytes=float("inf"))
+        heat_loops(sess, 40, 24, 2)
+        res = sess.verify()
+        assert res.ok and res.plans == 1
+        text = sess.explain(verify=True)
+        assert "verify:" in text and "clean" in text
+
+    def test_debug_mode_runs_clean_plans(self):
+        ref = Session("sim", num_tiles=4, capacity_bytes=float("inf"))
+        heat_loops(ref, 40, 24, 2)
+        ref.flush()
+        dbg = Session(ExecutionConfig(backend="ooc", num_tiles=4,
+                                      capacity_bytes=float("inf"),
+                                      debug=True))
+        heat_loops(dbg, 40, 24, 2)
+        dbg.flush()   # must not raise
+        assert dbg.history    # it executed
+
+    def test_debug_mode_rejects_corrupt_plan(self):
+        ex = OutOfCoreExecutor(OOCConfig(num_tiles=4,
+                                         capacity_bytes=float("inf"),
+                                         debug=True))
+        sess = Session(backend=ex)
+        heat_loops(sess, 40, 24, 1)
+        loops = list(sess.queue)
+        ir = ex.plan_chain(loops).ir
+        # Drop the last download: dirty rows are never retired.
+        cut = tuple(op for op in ir.ops
+                    if not (isinstance(op, Download)
+                            and op.tile == ir.num_tiles - 1))
+        bad = dataclasses.replace(ir, ops=cut)
+        with pytest.raises(PlanVerificationError) as ei:
+            ex.run_chain(loops, plan=bad)
+        assert any(d.category == "dirty-loss"
+                   for d in ei.value.result.errors)
+
+    def test_debug_mode_sharded(self):
+        sess = Session("sim", num_tiles=4, capacity_bytes=float("inf"),
+                       mesh="sim:4", debug=True)
+        heat_loops(sess, 48, 24, 2)
+        sess.flush()   # per-device verification + exchange pass, no raise
+        assert sess.history
+
+
+# -- the fuzzer --------------------------------------------------------------------
+
+
+def _fuzz_corpus():
+    corpus = {}
+    s = Session("sim", num_tiles=4, capacity_bytes=float("inf"),
+                cyclic=True, prefetch=True)
+    heat_loops(s, 40, 24, 2)
+    corpus["heat-cyclic"] = s.plan()
+    s = Session("sim", num_tiles=3, num_slots=1,
+                capacity_bytes=float("inf"))
+    heat_loops(s, 40, 24, 1)
+    corpus["heat-1slot"] = s.plan()
+    corpus["cl2d"] = _app_plans("cloverleaf2d", "ram", None)
+    corpus["cl2d-spill"] = _app_plans("cloverleaf2d", "spill", None)
+    corpus["cl2d-mesh"] = _app_plans("cloverleaf2d", "ram", "sim:4")
+    return corpus
+
+
+def test_fuzzer_has_zero_false_negatives():
+    total = 0
+    missed = []
+    for tag, plans in _fuzz_corpus().items():
+        for p in plans:
+            res = check_mutations(p)
+            total += len(res)
+            missed += [f"{tag}:{k}" for k, v in res.items() if not v]
+    assert total > 500
+    assert not missed, f"verifier missed {len(missed)}: {missed[:10]}"
+
+
+def test_mutations_cover_the_major_categories():
+    cats = set()
+    for plans in _fuzz_corpus().values():
+        for p in plans:
+            for m in enumerate_mutations(p):
+                cats.update(m.expect)
+    assert {"missing-op", "dirty-loss", "uninit-download", "missing-dep",
+            "slot-conflict", "illegal-elide", "halo-order", "halo-depth",
+            "disk-unfetched", "disk-unspilled"} <= cats
+
+
+if HAVE_HYPOTHESIS:
+    _PAIR_PLANS = None
+
+    def _pair_plans():
+        global _PAIR_PLANS
+        if _PAIR_PLANS is None:
+            s = Session("sim", num_tiles=4, capacity_bytes=float("inf"),
+                        cyclic=True)
+            heat_loops(s, 40, 24, 2)
+            (p,) = s.plan()
+            _PAIR_PLANS = (p, enumerate_mutations(p))
+        return _PAIR_PLANS
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_error_mutation_pairs_still_flagged(data):
+        """Corruptions only add defects: applying a second op-dropping
+        mutation on top of an error mutant must still be flagged."""
+        plan, muts = _pair_plans()
+        errors = [m for m in muts if m.severity == "error"]
+        first = data.draw(st.sampled_from(errors))
+        second = [m for m in enumerate_mutations(first.plan)
+                  if m.severity == "error"]
+        if second:
+            m2 = data.draw(st.sampled_from(second))
+            r = verify_plan(m2.plan)
+        else:
+            r = verify_plan(first.plan)
+        assert r.errors
+else:
+    def test_error_mutation_pairs_still_flagged():
+        """Seeded fallback (hypothesis not installed): random error-mutation
+        pairs must still produce error diagnostics."""
+        rng = np.random.default_rng(7)
+        s = Session("sim", num_tiles=4, capacity_bytes=float("inf"),
+                    cyclic=True)
+        heat_loops(s, 40, 24, 2)
+        (plan,) = s.plan()
+        muts = [m for m in enumerate_mutations(plan)
+                if m.severity == "error"]
+        for _ in range(40):
+            first = muts[rng.integers(len(muts))]
+            second = [m for m in enumerate_mutations(first.plan)
+                      if m.severity == "error"]
+            target = (second[rng.integers(len(second))].plan
+                      if second else first.plan)
+            assert verify_plan(target).errors
