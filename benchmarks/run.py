@@ -407,6 +407,93 @@ def verify_bench():
             "fuzz_missed": fuzz_missed}
 
 
+def serve_bench():
+    """Serving-layer smoke: 8 tenant jobs admitted onto a shared ``sim:4``
+    lane pool under each scheduling policy.  Asserts the admission oracle's
+    predicted makespans against the ledger-achieved ones (same model, same
+    plans — they must agree within tolerance), that cross-tenant plan
+    sharing happened, that one preempt/checkpoint/restore cycle ran, and
+    that an oversized job is rejected with a typed AdmissionError.  Returns
+    per-policy throughput rows for ``reports/bench_results.json``."""
+    import threading
+
+    from repro.apps.cloverleaf2d import CloverLeaf2D
+    from repro.serve import AdmissionError, StencilServer
+
+    n_jobs = 8
+    policies = []
+    for policy in ("fifo", "sjf"):
+        t0 = time.time()
+        with StencilServer("sim:4", policy=policy,
+                           capacity_bytes=4e6) as srv:
+            sessions = [srv.session(f"t{i}", priority=i % 2)
+                        for i in range(n_jobs)]
+            # Deterministic preempt/restore demonstration: t0's first chain
+            # boundary checkpoints its datasets, re-queues, restores.
+            srv.preempt("t0")
+            errs = []
+
+            def work(i):
+                try:
+                    app = CloverLeaf2D(nx=32 + 4 * (i % 3), ny=32,
+                                       summary_every=2)
+                    try:
+                        app.run(sessions[i], steps=2)
+                    finally:
+                        sessions[i].close()
+                except BaseException as e:  # pragma: no cover - surfaced below
+                    errs.append((i, repr(e)))
+
+            threads = [threading.Thread(target=work, args=(i,))
+                       for i in range(n_jobs)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errs, f"serve bench tenant failures: {errs}"
+            st = srv.stats()
+        wall = time.time() - t0
+        predicted = sum(t.predicted_s for t in st.tenants.values())
+        achieved = sum(t.achieved_modelled_s for t in st.tenants.values())
+        # Oracle and interpreter cost the same plans with the same ledger
+        # model; warm-cache effects (prefetch hits, pinned reuse) are the
+        # only divergence allowed.
+        assert achieved <= predicted * 1.05 + 1e-9, \
+            f"achieved {achieved:.6f}s exceeds oracle prediction {predicted:.6f}s"
+        assert achieved >= predicted * 0.5, \
+            f"achieved {achieved:.6f}s implausibly below prediction {predicted:.6f}s"
+        assert st.cross_tenant_plan_hits > 0, "no cross-tenant plan sharing"
+        assert st.preemptions >= 1, "preempt/restore cycle did not run"
+        policies.append({
+            "policy": policy,
+            "jobs": n_jobs,
+            "chains": st.jobs_completed,
+            "wall_s": wall,
+            "throughput_chains_per_s": st.jobs_completed / wall if wall else 0.0,
+            "predicted_s": predicted,
+            "achieved_modelled_s": achieved,
+            "predicted_vs_achieved": achieved / predicted if predicted else 1.0,
+            "mean_queue_wait_s": (sum(t.queue_wait_s
+                                      for t in st.tenants.values()) / n_jobs),
+            "cross_tenant_plan_hits": st.cross_tenant_plan_hits,
+            "preemptions": st.preemptions,
+            "plan_cache": st.plan_cache,
+        })
+    # Typed admission rejection on a pool too small for even one loop.
+    with StencilServer("sim:1", capacity_bytes=1024) as srv:
+        app = CloverLeaf2D(nx=64, ny=64, summary_every=1)
+        rt = srv.session("oversized")
+        try:
+            app.record_init(rt)
+            rt.flush()
+            raise AssertionError("oversized job was not rejected")
+        except AdmissionError:
+            rejected = True
+        rt.queue.clear()
+        rt.close()
+    return {"policies": policies, "oversized_rejected": rejected}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tune", action="store_true",
@@ -416,6 +503,9 @@ def main(argv=None) -> None:
     ap.add_argument("--verify", action="store_true",
                     help="static plan verification sweep (apps x tiers x "
                          "meshes) + fuzzer; exit 1 on any error diagnostic")
+    ap.add_argument("--serve", action="store_true",
+                    help="serving-layer smoke: 8 tenants on sim:4 under "
+                         "each policy; oracle-vs-achieved makespan gate")
     args = ap.parse_args(argv)
 
     # Fresh clones may lack reports/ (and nested sections write artifacts
@@ -443,6 +533,33 @@ def main(argv=None) -> None:
             raise SystemExit(
                 f"plan verification FAILED: {errors} error diagnostic(s), "
                 f"{vb['fuzz_missed']} fuzzer false negative(s)")
+        return
+
+    if args.serve:
+        t0 = time.time()
+        print("== Serving layer: 8 tenants on a shared sim:4 lane pool ==")
+        sv = serve_bench()
+        for r in sv["policies"]:
+            print(f"serve/{r['policy']},jobs={r['jobs']},"
+                  f"chains={r['chains']},"
+                  f"throughput={r['throughput_chains_per_s']:.1f} chains/s,"
+                  f"pred/achieved=x{r['predicted_vs_achieved']:.2f},"
+                  f"xtenant_hits={r['cross_tenant_plan_hits']},"
+                  f"preemptions={r['preemptions']}")
+        print(f"serve/admission,oversized_rejected={sv['oversized_rejected']}")
+        path = "reports/bench_results.json"
+        results = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    results = json.load(f)
+            except (OSError, ValueError):
+                results = {}
+        results["serve"] = sv
+        with open(path, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+        print(f"\nserve bench time: {time.time() - t0:.0f}s; "
+              f"results -> {path}")
         return
 
     if args.simulate:

@@ -9,7 +9,8 @@ from .backends import (
 )
 from .block import Block
 from .dataset import Dataset, make_dataset
-from .dependency import ChainInfo, analyze_chain, chain_signature, plan_signature
+from .dependency import (ChainInfo, analyze_chain, chain_signature,
+                         plan_signature, shared_plan_signature)
 from .executor import (
     ChainPlan,
     ChainStats,
@@ -75,6 +76,7 @@ from .tune import TuneResult, tune_configs
 from .program import (
     ExecutionConfig,
     Session,
+    SessionClosedError,
     StencilProgram,
     StencilValidationError,
     infer_args,
@@ -116,10 +118,11 @@ from .transfer import (
 
 __all__ = [
     "Block", "Dataset", "make_dataset", "ChainInfo", "analyze_chain",
-    "chain_signature", "plan_signature",
+    "chain_signature", "plan_signature", "shared_plan_signature",
     "ChainPlan", "ChainStats", "OOCConfig", "OutOfCoreExecutor",
     "ResidentExecutor", "ReferenceRuntime", "Runtime",
-    "Session", "StencilProgram", "ExecutionConfig", "StencilValidationError",
+    "Session", "SessionClosedError", "StencilProgram", "ExecutionConfig",
+    "StencilValidationError",
     "infer_args", "trace_kernel",
     "available_backends", "make_backend", "register_backend",
     "ReferenceBackend", "PallasBackend",

@@ -33,12 +33,13 @@ from __future__ import annotations
 
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
-from .dependency import ChainInfo, analyze_chain, chain_signature, plan_signature
+from .dependency import (ChainInfo, analyze_chain, chain_signature,
+                         plan_signature, shared_plan_signature)
 from .engine import TileEngine
 from .interp import DataPlaneInterpreter, LedgerInterpreter, SpecState
 from .loop import ParallelLoop
@@ -153,7 +154,7 @@ class ChainPlan:
 class OutOfCoreExecutor:
     """Explicitly-managed 3-slot streaming executor (Algorithm 1)."""
 
-    def __init__(self, config: OOCConfig = None):
+    def __init__(self, config: OOCConfig = None, *, shared_plans=None):
         self.cfg = config or OOCConfig()
         # LRU-bounded: kernels capturing a per-step constant (a real dt
         # changing every step) legitimately produce a new plan per flush —
@@ -165,6 +166,13 @@ class OutOfCoreExecutor:
         self.plan_hits = 0
         self.plan_misses = 0
         self.plan_time_s = 0.0
+        # Optional cross-executor plan cache (repro.serve.SharedPlanCache):
+        # consulted on a local miss under the tenant-neutral signature, fed
+        # on every build.  ``tenant`` attributes lookups for the serving
+        # layer's cross-tenant hit counters; executors outside a server
+        # leave both None.
+        self.shared_plans = shared_plans
+        self.tenant: Optional[str] = None
         # The transfer subsystem: engine (worker threads or sync fallback)
         # and residency manager (slot pool, dirty tracking, pinned cache,
         # capacity accounting) are executor-lifetime so pinned device arrays
@@ -212,6 +220,21 @@ class OutOfCoreExecutor:
             return plan
         if key in self._no_fit:   # negative cache: skip the doomed analysis
             raise MemoryError("chain cannot fit (cached verdict); splitting")
+        shared_key = None
+        if self.shared_plans is not None:
+            # Same config knobs, tenant-neutral dataset identity: a plan
+            # another executor (or tenant) built for an isomorphic chain
+            # replays here once its ChainInfo is rebound to our datasets.
+            shared_key = (shared_plan_signature(loops, cfg.tiled_dim),) + key[1:]
+            cached = self.shared_plans.lookup(shared_key, self.tenant)
+            if cached is not None:
+                adopted = self._adopt_shared(cached, loops, key)
+                if adopted is not None:
+                    self._plans[key] = adopted
+                    if len(self._plans) > self._max_plans:
+                        self._plans.popitem(last=False)
+                    self.plan_hits += 1
+                    return adopted
         t0 = time.perf_counter()
         try:
             info = analyze_chain(loops, tiled_dim=cfg.tiled_dim)
@@ -258,7 +281,36 @@ class OutOfCoreExecutor:
             self._plans.popitem(last=False)
         self.plan_misses += 1
         self.plan_time_s += plan.plan_s
+        if shared_key is not None:
+            self.shared_plans.insert(shared_key, plan, self.tenant)
         return plan
+
+    def _adopt_shared(self, cp: ChainPlan, loops: Sequence[ParallelLoop],
+                      key: Tuple) -> Optional[ChainPlan]:
+        """Rebind a shared-cache ChainPlan to this chain's datasets.
+
+        The Plan IR, tile schedule and engine reference datasets by *name*
+        (the engine additionally closes over the donor chain's kernels, which
+        the shared signature guarantees are value-identical to ours), so a
+        shallow copy with ``info.datasets`` swapped to our Dataset objects is
+        a complete rebind.  Sharing the engine is the point: the adopter
+        reuses the donor's jit cache.  Returns None if the dataset name sets
+        somehow disagree (signature collision paranoia — build fresh)."""
+        dats = {}
+        for lp in loops:
+            for a in lp.args:
+                dats.setdefault(a.dat.name, a.dat)
+        if set(dats) != set(cp.info.datasets):
+            return None
+        if all(dats[n] is d for n, d in cp.info.datasets.items()):
+            info = cp.info            # same tenant, different executor/lane
+        else:
+            info = replace(cp.info, datasets=dats)
+        return ChainPlan(
+            key=key, info=info, sched=cp.sched, engine=cp.engine,
+            slot_bytes=cp.slot_bytes, sig=cp.sig, plan_s=0.0, ir=cp.ir,
+            pinned_names=cp.pinned_names, pinned_bytes=cp.pinned_bytes,
+        )
 
     @property
     def plan_hit_rate(self) -> float:

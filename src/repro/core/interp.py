@@ -21,7 +21,7 @@ old inline ``sim``/real branches are now one code path with data hooks.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -460,6 +460,20 @@ def simulate_plan(plan: Plan, hw: HardwareModel) -> InterpResult:
     """Cost one plan on ``hw`` with cold caches (fresh residency/prefetch
     state) — what :meth:`Session.explain` and the autotuner report."""
     return LedgerInterpreter(plan, hw).run()
+
+
+def predict_plans(plans: Sequence[Plan], hw: HardwareModel) -> Tuple[float, int]:
+    """Admission-oracle prediction over one chain's (possibly split) plans:
+    the summed cold-cache modelled makespan and the peak fast-memory
+    footprint — slot pool plus pinned residency — any single plan claims
+    while it runs.  Plans in a split chain execute back-to-back on one
+    device, so footprints max (never sum) across them."""
+    makespan = 0.0
+    peak = 0
+    for p in plans:
+        makespan += simulate_plan(p, hw).makespan
+        peak = max(peak, p.slot_bytes * p.num_slots + p.pinned_bytes)
+    return makespan, peak
 
 
 # -- the real data plane -----------------------------------------------------------

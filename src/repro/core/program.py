@@ -47,6 +47,17 @@ class StencilValidationError(ValueError):
     """Declared stencils/modes disagree with what the kernel actually does."""
 
 
+class SessionClosedError(RuntimeError):
+    """Work was submitted to a Session after :meth:`Session.close`.
+
+    ``close()`` itself is idempotent, and reads of already-materialised data
+    (``fetch`` with an empty queue, ``reduction`` of a retained result) stay
+    legal after close — only *new work* (``par_loop``, a flush with loops
+    still queued) raises.  Server-registered sessions deregister their tenant
+    on first close; this error is what a use-after-close gets instead of an
+    AttributeError from a torn-down backend."""
+
+
 @dataclass
 class ExecutionConfig:
     """One config object selecting and parameterising a backend.
@@ -387,6 +398,7 @@ class Session:
         # per-step constant mint a new fingerprint every step.
         self._arg_cache: "OrderedDict[Tuple, Tuple[Arg, ...]]" = OrderedDict()
         self._max_arg_cache = 512
+        self._closed = False
 
     # -- recording -------------------------------------------------------------
     def par_loop(
@@ -409,6 +421,9 @@ class Session:
         ``explicit_stencil={name: stencil}`` overrides the inferred READ
         stencil for that dataset; ``inc=[name]`` marks accumulating writes.
         """
+        if self._closed:
+            raise SessionClosedError(
+                f"par_loop({name!r}) on a closed Session")
         range_t = tuple((int(a), int(b)) for a, b in range_)
         declared: List[Arg] = []
         inferred_dats: List[Dataset] = []
@@ -500,6 +515,11 @@ class Session:
         that actually executes loops replaces it."""
         if not self.queue:
             return
+        if self._closed:
+            # Unreachable through the public API (par_loop refuses to record
+            # after close), but a queue mutated by hand must not silently run
+            # on a torn-down backend.
+            raise SessionClosedError("flush() of queued loops on a closed Session")
         self._red_results.clear()
         queue, self.queue = self.queue, []
         chain: List[ParallelLoop] = []
@@ -756,8 +776,13 @@ class Session:
 
     def close(self) -> None:
         """Flush pending loops and release backend resources (the threaded
-        transfer engine's worker threads, for ``ooc``-family backends)."""
+        transfer engine's worker threads, for ``ooc``-family backends; the
+        server-side tenant registration, for serving clients).  Idempotent:
+        the second and later calls are no-ops."""
+        if self._closed:
+            return
         self.flush()
+        self._closed = True
         fn = getattr(self.backend, "close", None)
         if fn is not None:
             fn()
@@ -773,9 +798,11 @@ class Session:
             # asked for (and could mask the original exception).  Drop the
             # queue, release backend resources, let the exception propagate.
             self.queue.clear()
-            fn = getattr(self.backend, "close", None)
-            if fn is not None:
-                fn()
+            if not self._closed:
+                self._closed = True
+                fn = getattr(self.backend, "close", None)
+                if fn is not None:
+                    fn()
             return
         self.close()
 

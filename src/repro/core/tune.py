@@ -68,15 +68,19 @@ def split_chains(loops: Sequence[ParallelLoop]) -> List[List[ParallelLoop]]:
     return chains
 
 
-def make_sim_executor(config):
+def make_sim_executor(config, *, shared_plans=None):
     """A throwaway ledger-only executor for ``config`` — sharded when the
     config carries a multi-device mesh, so the tuner's shard-count
     candidates are costed with their per-device streams and halo ops.
     Delegates to the backend registry's builder so the tuner can never cost
-    a different executor shape than ``make_backend`` would construct."""
+    a different executor shape than ``make_backend`` would construct.
+    ``shared_plans`` lets the serving layer's admission oracle plan through
+    (and feed) the cross-tenant cache, so admission checks are cheap for
+    chains the server has already planned."""
     from .backends import _ooc_executor
 
-    return _ooc_executor(config, simulate_only=True, transfer="sync")
+    return _ooc_executor(config, shared_plans=shared_plans,
+                         simulate_only=True, transfer="sync")
 
 
 def modelled_makespan(config, chains: Sequence[Sequence[ParallelLoop]],

@@ -1,0 +1,345 @@
+"""Serving-layer tests: multi-tenant determinism, admission control,
+cross-tenant plan sharing, preemption/restore, session-close semantics.
+
+Everything runs on virtual ``sim:N`` lane pools with real data-plane
+executors — deterministic on CPU, no accelerator needed.  The load-bearing
+property throughout: concurrency and scheduling move *wall-clock* time only;
+tenant results are bit-identical to serial runs because tenants own disjoint
+datasets and kernels are pure.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Block, Session, SessionClosedError, make_dataset
+from repro.apps.cloverleaf2d import CloverLeaf2D
+from repro.apps.cloverleaf3d import CloverLeaf3D
+from repro.apps.opensbli import OpenSBLI
+from repro.serve import (
+    AdmissionError,
+    ServeError,
+    SharedPlanCache,
+    StencilServer,
+    available_policies,
+    make_policy,
+)
+
+CAP = 2e6   # small enough to force real multi-tile streaming on test grids
+
+
+def _serial(app_factory, steps):
+    app = app_factory()
+    rt = app.make_session("ooc", capacity_bytes=CAP)
+    try:
+        return app.run(rt, steps=steps)
+    finally:
+        rt.close()
+
+
+def _assert_summaries_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"summary {k!r} diverged")
+
+
+# -- concurrent determinism ---------------------------------------------------------
+
+_WORKLOADS = [
+    ("cl2d-a", lambda: CloverLeaf2D(nx=24, ny=24, summary_every=2), 2),
+    ("cl2d-b", lambda: CloverLeaf2D(nx=20, ny=28, summary_every=2), 2),
+    ("cl3d-a", lambda: CloverLeaf3D(nx=10, ny=10, nz=10, summary_every=2), 2),
+    ("osbli-a", lambda: OpenSBLI(n=12), 2),
+    ("cl2d-c", lambda: CloverLeaf2D(nx=24, ny=24, summary_every=2), 2),
+    ("cl2d-d", lambda: CloverLeaf2D(nx=28, ny=20, summary_every=2), 2),
+    ("cl3d-b", lambda: CloverLeaf3D(nx=12, ny=8, nz=10, summary_every=2), 2),
+    ("osbli-b", lambda: OpenSBLI(n=10), 2),
+]
+
+
+@pytest.fixture(scope="module")
+def serial_results():
+    """Ground truth, computed once: each workload run alone on a plain
+    single-session ooc backend."""
+    return {name: _serial(factory, steps)
+            for name, factory, steps in _WORKLOADS}
+
+
+@pytest.mark.parametrize("policy", ["fifo", "sjf"])
+def test_eight_tenants_bit_identical_to_serial(policy, serial_results):
+    """8 mixed-app tenants submitted from threads against one sim:4 pool
+    produce exactly the serial results, under both scheduling policies."""
+    outs, errs = {}, []
+    with StencilServer("sim:4", policy=policy, capacity_bytes=CAP) as srv:
+        def work(name, factory, steps):
+            try:
+                app = factory()
+                rt = srv.session(name)
+                try:
+                    outs[name] = app.run(rt, steps=steps)
+                finally:
+                    rt.close()
+            except BaseException as e:  # surfaced after join
+                errs.append((name, e))
+        threads = [threading.Thread(target=work, args=w) for w in _WORKLOADS]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs, f"tenant failures: {errs}"
+        st = srv.stats()
+        # Identical cl2d tenants must have shared plans across tenants.
+        assert st.cross_tenant_plan_hits > 0
+        assert st.jobs_completed >= len(_WORKLOADS)
+        assert st.jobs_rejected == 0
+        # Every tenant's achieved ledger time matches what the admission
+        # oracle predicted from the same plans.
+        for name, t in st.tenants.items():
+            if t.predicted_s > 0:
+                assert t.achieved_modelled_s == pytest.approx(
+                    t.predicted_s, rel=0.5), name
+    for name, _, _ in _WORKLOADS:
+        _assert_summaries_equal(outs[name], serial_results[name])
+
+
+def test_single_tenant_matches_serial(serial_results):
+    name, factory, steps = _WORKLOADS[0]
+    with StencilServer("sim:2", capacity_bytes=CAP) as srv:
+        app = factory()
+        rt = srv.session("solo")
+        out = app.run(rt, steps=steps)
+        rt.close()
+    _assert_summaries_equal(out, serial_results[name])
+
+
+# -- cross-tenant plan sharing ------------------------------------------------------
+
+def test_cross_tenant_plan_cache_hit_and_stats():
+    with StencilServer("sim:2", capacity_bytes=CAP) as srv:
+        for name in ("alice", "bob"):
+            app = CloverLeaf2D(nx=24, ny=24, summary_every=2)
+            rt = srv.session(name)
+            app.run(rt, steps=2)
+            rt.close()
+        st = srv.stats()
+        cache = st.plan_cache
+        assert st.cross_tenant_plan_hits > 0
+        assert cache["inserts"] > 0
+        assert cache["hits"] >= cache["cross_tenant_hits"]
+        # bob adopted alice's plans: far fewer inserts than total jobs
+        assert st.tenants["bob"].chains > 0
+
+
+def test_shared_cache_lru_and_counters():
+    cache = SharedPlanCache(max_plans=2)
+    sentinel = object()
+    cache.insert(("k1",), sentinel, "a")
+    cache.insert(("k2",), sentinel, "a")
+    cache.insert(("k3",), sentinel, "a")       # evicts k1
+    assert len(cache) == 2
+    assert cache.lookup(("k1",), "b") is None
+    assert cache.lookup(("k2",), "b") is sentinel
+    assert cache.cross_tenant_hits == 1
+    assert cache.lookup(("k2",), "a") is sentinel
+    assert cache.cross_tenant_hits == 1        # same-tenant hit not counted
+    s = cache.stats()
+    assert s["inserts"] == 3 and s["hits"] == 2 and s["misses"] == 1
+
+
+# -- admission control --------------------------------------------------------------
+
+def test_admission_rejects_oversized_job_typed():
+    with StencilServer("sim:1", capacity_bytes=1024) as srv:
+        app = CloverLeaf2D(nx=64, ny=64, summary_every=1)
+        rt = srv.session("big")
+        with pytest.raises(AdmissionError) as ei:
+            app.record_init(rt)
+            rt.flush()
+        assert isinstance(ei.value, RuntimeError)   # typed, not AttributeError
+        assert srv.stats().jobs_rejected >= 1
+        assert srv.stats().tenants["big"].rejected >= 1
+        # the server survives a rejection: the session must close cleanly
+        # (the rejected loops were consumed by the failed flush)
+        rt.queue.clear()
+        rt.close()
+
+
+def test_admission_admits_and_predicts():
+    with StencilServer("sim:1", capacity_bytes=CAP) as srv:
+        app = CloverLeaf2D(nx=24, ny=24, summary_every=1)
+        rt = srv.session("ok")
+        app.record_init(rt)
+        verdict = srv.oracle.predict(list(rt.queue), tenant="ok")
+        assert verdict.admitted
+        assert verdict.predicted_makespan_s > 0
+        assert 0 < verdict.predicted_bytes <= CAP
+        rt.flush()
+        sla = srv.sla_estimate("ok")
+        assert set(sla) == {"queued_jobs", "predicted_queue_wait_s",
+                            "predicted_makespan_s"}
+        rt.close()
+
+
+# -- preemption / migration ---------------------------------------------------------
+
+def _drive_cl2d(app, rt, steps, *, preempt=None):
+    """app.run's loop, with an optional (server, tenant, step) preempt hook
+    fired between chain boundaries — mid-workload, deterministically."""
+    app.record_init(rt)
+    rt.flush()
+    rt.cyclic = True
+    for s in range(steps):
+        if preempt is not None and s == preempt[2]:
+            preempt[0].preempt(preempt[1])
+        app._ideal_gas(rt, "density0", "energy0", "_dt")
+        app._viscosity(rt)
+        app._calc_dt(rt)
+        app.dt = float(min(1e-4, rt.reduction("dt")))
+        app.record_timestep(rt)
+    out = {}
+    for name in app.record_summary(rt):
+        out[name] = float(rt.reduction(name))
+    rt.flush()
+    return out
+
+
+def test_preempt_checkpoint_resume_bit_identical(tmp_path):
+    steps = 3
+    plain_app = CloverLeaf2D(nx=24, ny=24, summary_every=0)
+    plain = plain_app.make_session("ooc", capacity_bytes=CAP)
+    want = _drive_cl2d(plain_app, plain, steps)
+    plain.close()
+
+    with StencilServer("sim:2", capacity_bytes=CAP,
+                       spill_dir=str(tmp_path)) as srv:
+        app = CloverLeaf2D(nx=24, ny=24, summary_every=0)
+        rt = srv.session("victim", priority=0)
+        got = _drive_cl2d(app, rt, steps, preempt=(srv, "victim", 1))
+        rt.close()
+        st = srv.stats()
+        assert st.preemptions >= 1
+        assert st.tenants["victim"].preemptions >= 1
+    _assert_summaries_equal(got, want)
+
+
+def test_auto_preempt_flags_lower_priority():
+    """A high-priority tenant queued behind a busy pool flags the running
+    low-priority tenant; the victim's next boundary pays a checkpoint/restore
+    cycle and both finish bit-identical to serial."""
+    results = {}
+    with StencilServer("sim:1", capacity_bytes=CAP, policy="fifo") as srv:
+        lo_app = CloverLeaf2D(nx=24, ny=24, summary_every=3)
+        hi_app = CloverLeaf2D(nx=20, ny=20, summary_every=3)
+        lo = srv.session("lo", priority=0)
+        hi = srv.session("hi", priority=5)
+
+        def lo_work():
+            results["lo"] = lo_app.run(lo, steps=3)
+
+        def hi_work():
+            results["hi"] = hi_app.run(hi, steps=3)
+
+        t1 = threading.Thread(target=lo_work)
+        t2 = threading.Thread(target=hi_work)
+        t1.start()
+        t2.start()
+        t1.join()
+        t2.join()
+        lo.close()
+        hi.close()
+        st = srv.stats()
+        assert st.jobs_completed > 0
+    _assert_summaries_equal(
+        results["lo"],
+        _serial(lambda: CloverLeaf2D(nx=24, ny=24, summary_every=3), 3))
+    _assert_summaries_equal(
+        results["hi"],
+        _serial(lambda: CloverLeaf2D(nx=20, ny=20, summary_every=3), 3))
+
+
+# -- session close semantics (satellite) --------------------------------------------
+
+def _tiny_loop(rt, dat):
+    rt.par_loop("scale", dat.block, dat.block.full_range(), [dat],
+                lambda acc: {dat.name: acc(dat.name) * 0.5})
+
+
+def test_session_close_is_idempotent():
+    rt = Session("ooc", capacity_bytes=CAP)
+    blk = Block("b", (16, 16))
+    d = make_dataset(blk, "d", init=np.ones((16, 16), np.float32))
+    _tiny_loop(rt, d)
+    rt.flush()
+    rt.close()
+    rt.close()          # second close: no-op, no AttributeError
+    rt.close()
+
+
+def test_par_loop_after_close_raises_typed():
+    rt = Session("ooc", capacity_bytes=CAP)
+    blk = Block("b", (16, 16))
+    d = make_dataset(blk, "d", init=np.ones((16, 16), np.float32))
+    rt.close()
+    with pytest.raises(SessionClosedError):
+        _tiny_loop(rt, d)
+    # reads of already-materialised data stay legal after close
+    assert rt.fetch(d).shape == (16, 16)
+    rt.flush()          # empty flush after close: explicit no-op
+    with pytest.raises(SessionClosedError):
+        rt.queue.append(object())   # hand-mutated queue must not run
+        rt.flush()
+
+
+def test_server_session_close_deregisters():
+    with StencilServer("sim:1", capacity_bytes=CAP) as srv:
+        app = CloverLeaf2D(nx=24, ny=24, summary_every=1)
+        rt = srv.session("t")
+        app.record_init(rt)
+        rt.flush()
+        backend = rt.backend
+        rt.close()
+        rt.close()      # idempotent through the client too
+        assert srv.stats().tenants["t"].state == "closed"
+        with pytest.raises(SessionClosedError):
+            backend.run_chain([])   # use-after-close is typed, not AttributeError
+        # a closed tenant's name is reusable
+        rt2 = srv.session("t")
+        rt2.close()
+
+
+def test_duplicate_tenant_rejected():
+    with StencilServer("sim:1", capacity_bytes=CAP) as srv:
+        rt = srv.session("dup")
+        with pytest.raises(ServeError):
+            srv.session("dup")
+        rt.close()
+
+
+# -- registry / stats plumbing ------------------------------------------------------
+
+def test_policy_registry():
+    assert {"fifo", "sjf"} <= set(available_policies())
+    with pytest.raises(ValueError):
+        make_policy("nope")
+    from repro.serve.policy import JobView
+    a = JobView(tenant="a", seq=1, priority=0, predicted_makespan_s=5.0)
+    b = JobView(tenant="b", seq=2, priority=0, predicted_makespan_s=1.0)
+    c = JobView(tenant="c", seq=3, priority=9, predicted_makespan_s=9.0)
+    assert make_policy("fifo").select([a, b]) is a
+    assert make_policy("sjf").select([a, b]) is b
+    # priority classes dominate under both policies
+    assert make_policy("fifo").select([a, b, c]) is c
+    assert make_policy("sjf").select([a, b, c]) is c
+
+
+def test_server_stats_summary_renders():
+    with StencilServer("sim:2", capacity_bytes=CAP) as srv:
+        app = CloverLeaf2D(nx=24, ny=24, summary_every=2)
+        rt = srv.session("s")
+        app.run(rt, steps=2)
+        rt.close()
+        text = srv.stats().summary()
+    assert "policy=fifo" in text
+    assert "cross-tenant" in text
+    assert "s:" in text
