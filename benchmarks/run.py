@@ -494,6 +494,100 @@ def serve_bench():
     return {"policies": policies, "oversized_rejected": rejected}
 
 
+def trace_smoke():
+    """Observability smoke (``--trace``): (a) sim-mode drift audit is
+    oracle-exact — the modelled spans the sim interpreter emits *are* the
+    simulated ledger events, so ``repro.obs.audit.compare`` must report a
+    per-stream ratio of exactly 1.0; (b) a threaded data-plane CloverLeaf2D
+    run exports a valid Chrome trace with distinct compute/upload/download
+    tracks, a nonzero span count per stream, and wall-vs-model drift ratios
+    inside a loose sanity band (CPU wall clock against the TPU-class
+    hardware model — orders of magnitude apart, but finite and positive)."""
+    from repro.apps import CloverLeaf2D
+    from repro.core import Session
+    from repro.obs import compare, validate_chrome_trace
+
+    # (a) modelled == achieved, bit for bit, on every stream of every chain
+    app = CloverLeaf2D(40, 24, summary_every=0)
+    sess = Session("sim", num_tiles=4,
+                   capacity_bytes=app.total_bytes() * 0.5, trace=True)
+    app.record_init(sess)
+    sess.flush()
+    app.dt = 1e-4
+    app.record_timestep(sess)
+    sess.flush()
+    tr = sess.trace()
+    sim_streams = {}
+    for ci, ledger in enumerate(sess.backend.ledgers):
+        rep = compare(ledger, tr, chain=ci)
+        if rep.unmatched_events:
+            raise SystemExit(
+                f"trace smoke: chain {ci} left {rep.unmatched_events} "
+                f"ledger events unmatched in sim mode")
+        for sd in rep.streams.values():
+            name = sd.name
+            if sd.ratio != 1.0:
+                raise SystemExit(
+                    f"trace smoke: sim drift on chain {ci} stream {name}: "
+                    f"ratio {sd.ratio!r} != 1.0 "
+                    f"(modelled {sd.modelled_s}, achieved {sd.achieved_s})")
+            agg = sim_streams.setdefault(
+                name, {"events": 0, "modelled_s": 0.0, "ratio": 1.0})
+            agg["events"] += sd.events
+            agg["modelled_s"] += sd.modelled_s
+    if not {"compute", "upload", "download"} <= set(sim_streams):
+        raise SystemExit(
+            f"trace smoke: sim run exercised only {sorted(sim_streams)}")
+    sim_spans = len(tr)
+    sess.close()
+
+    # (b) threaded data plane: chrome export + per-stream spans + loose band
+    app = CloverLeaf2D(48, 32, summary_every=0)
+    sess = Session("ooc-async", num_tiles=4, capacity_bytes=float("inf"),
+                   trace=True)
+    app.run(sess, steps=2)
+    tr = sess.trace()
+    track_counts = {}
+    for s in tr.spans():
+        track_counts[s.track] = track_counts.get(s.track, 0) + 1
+    for t in ("compute", "upload", "download"):
+        if not track_counts.get(t):
+            raise SystemExit(
+                f"trace smoke: no spans on the {t!r} track "
+                f"(tracks: {sorted(track_counts)})")
+    doc = tr.chrome()
+    validate_chrome_trace(doc)
+    wall_streams = {}
+    for ci, ledger in enumerate(sess.backend.ledgers):
+        rep = compare(ledger, tr, chain=ci)
+        for sd in rep.streams.values():
+            name = sd.name
+            if sd.modelled_s <= 0.0 or sd.achieved_s <= 0.0:
+                continue
+            if not (1e-4 < sd.ratio < 1e8):
+                raise SystemExit(
+                    f"trace smoke: wall drift on chain {ci} stream {name} "
+                    f"out of band: ratio {sd.ratio!r}")
+            agg = wall_streams.setdefault(
+                name, {"events": 0, "modelled_s": 0.0, "achieved_s": 0.0})
+            agg["events"] += sd.events
+            agg["modelled_s"] += sd.modelled_s
+            agg["achieved_s"] += sd.achieved_s
+    lanes = sess.transfer_stats()["lanes"]
+    sess.close()
+    for name, agg in wall_streams.items():
+        agg["ratio"] = (agg["achieved_s"] / agg["modelled_s"]
+                        if agg["modelled_s"] else 0.0)
+    return {
+        "sim": {"spans": sim_spans, "streams": sim_streams,
+                "oracle_exact": True},
+        "wall": {"spans": len(tr), "chrome_events": len(doc["traceEvents"]),
+                 "tracks": track_counts, "streams": wall_streams,
+                 "lane_histograms": {k: {m: h["count"] for m, h in v.items()}
+                                     for k, v in lanes.items()}},
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tune", action="store_true",
@@ -506,6 +600,10 @@ def main(argv=None) -> None:
     ap.add_argument("--serve", action="store_true",
                     help="serving-layer smoke: 8 tenants on sim:4 under "
                          "each policy; oracle-vs-achieved makespan gate")
+    ap.add_argument("--trace", action="store_true",
+                    help="observability smoke: sim drift audit must be "
+                         "oracle-exact; threaded run must export a valid "
+                         "Chrome trace with per-stream spans")
     args = ap.parse_args(argv)
 
     # Fresh clones may lack reports/ (and nested sections write artifacts
@@ -560,6 +658,30 @@ def main(argv=None) -> None:
             json.dump(results, f, indent=1, default=float)
         print(f"\nserve bench time: {time.time() - t0:.0f}s; "
               f"results -> {path}")
+        return
+
+    if args.trace:
+        t0 = time.time()
+        print("== Observability smoke: drift audit + Chrome export ==")
+        ts = trace_smoke()
+        print(f"trace/sim,spans={ts['sim']['spans']},"
+              f"streams={len(ts['sim']['streams'])},"
+              f"oracle_exact={ts['sim']['oracle_exact']}")
+        for name, agg in sorted(ts["sim"]["streams"].items()):
+            print(f"trace/sim/{name},events={agg['events']},"
+                  f"modelled={agg['modelled_s'] * 1e3:.3f}ms,ratio=1.0")
+        w = ts["wall"]
+        print(f"trace/wall,spans={w['spans']},"
+              f"chrome_events={w['chrome_events']},"
+              f"tracks={len(w['tracks'])}")
+        for name, agg in sorted(w["streams"].items()):
+            print(f"trace/wall/{name},events={agg['events']},"
+                  f"achieved={agg['achieved_s'] * 1e3:.2f}ms,"
+                  f"ratio={agg['ratio']:.3g}")
+        with open("reports/bench_trace.json", "w") as f:
+            json.dump(ts, f, indent=1, default=float)
+        print(f"\ntrace smoke time: {time.time() - t0:.0f}s; "
+              f"results -> reports/bench_trace.json")
         return
 
     if args.simulate:

@@ -47,6 +47,7 @@ from .memory import HardwareModel, TPU_V5E, TransferLedger
 from .plan import Plan, build_plan
 from .tiling import TileSchedule, choose_num_tiles, make_tile_schedule
 from .transfer import ResidencyManager, TransferEngine, resolve_codecs
+from ..obs.tracer import AnyTracer, as_tracer
 
 
 @dataclass
@@ -74,6 +75,11 @@ class OOCConfig:
     # (repro.core.verify); error-severity diagnostics raise
     # PlanVerificationError instead of executing a corrupting stream.
     debug: bool = False
+    # -- observability (repro.obs) -------------------------------------------
+    # True mints a fresh span Tracer; an existing Tracer shares one spine
+    # across executors (the sharded mesh and serve lanes do this).  Off by
+    # default: the hot path then pays one attribute check per chain/op.
+    trace: object = None                     # None/False | True | obs.Tracer
 
     @property
     def capacity(self) -> float:
@@ -188,6 +194,13 @@ class OutOfCoreExecutor:
         # data-plane interpreter can run HaloExchange ops for real.
         self.halo_runtime = None
         self.history: List[ChainStats] = []
+        # Observability spine (repro.obs): a mesh/serve parent may overwrite
+        # both to share one tracer and prefix this executor's tracks.
+        self.tracer: AnyTracer = as_tracer(self.cfg.trace)
+        self.trace_tag: str = ""
+        # Per-chain ledgers, retained only while tracing — the drift audit
+        # needs each chain's modelled timeline next to its achieved spans.
+        self.ledgers: List[TransferLedger] = []
 
     # -- planning ---------------------------------------------------------------
     def plan_chain(self, loops: Sequence[ParallelLoop],
@@ -396,6 +409,9 @@ class OutOfCoreExecutor:
                          ) -> Dict[str, np.ndarray]:
         cfg = self.cfg
         t_wall = time.perf_counter()
+        tr = self.tracer
+        chain_index = len(self.history)
+        t_tr0 = tr.clock() if tr.enabled else 0.0
         n_cached = self.plan_hits
         cp = self.plan_chain(loops, keep_live, halo, warm=warm)
         cache_hit = self.plan_hits > n_cached
@@ -432,13 +448,24 @@ class OutOfCoreExecutor:
         if cfg.simulate_only:
             interp = LedgerInterpreter(
                 ir, cfg.hw, rm=self.residency, spec=self._spec,
-                datasets=cp.info.datasets)
+                datasets=cp.info.datasets,
+                tracer=tr, trace_tag=self.trace_tag,
+                chain_index=chain_index)
         else:
             interp = DataPlaneInterpreter(
                 ir, cfg.hw, rm=self.residency, spec=self._spec, cp=cp, tx=tx,
                 codecs=resolve_codecs(cfg.codec, tuple(cp.info.datasets)),
-                halo_runtime=self.halo_runtime)
+                halo_runtime=self.halo_runtime,
+                tracer=tr, trace_tag=self.trace_tag,
+                chain_index=chain_index)
         res = interp.run()
+        if tr.enabled:
+            self.ledgers.append(res.ledger)
+            tr.emit("chain", cat="chain", track=self.trace_tag + "chain",
+                    t_start=t_tr0, t_end=tr.clock(),
+                    args={"chain": chain_index, "sig": ir.sig_hash[:12],
+                          "tiles": ir.num_tiles, "cache_hit": cache_hit,
+                          "mode": "sim" if cfg.simulate_only else "data"})
         tx_delta = tx.delta(tx.snapshot(), tx_before)
         raw_total = res.uploaded + res.downloaded
         wire_total = res.uploaded_wire + res.downloaded_wire
@@ -517,6 +544,9 @@ class OutOfCoreExecutor:
             # device mesh (repro.core.sharded): halo-exchange traffic
             "halo_messages": sum(c.halo_messages for c in self.history),
             "halo_bytes": sum(c.halo_bytes for c in self.history),
+            # per-lane queue-wait / service-time histograms straight from the
+            # TransferHandle timestamps ({lane: {"queue_wait": snap, ...}})
+            "lanes": self.transfer.lane_stats(),
         }
 
 
@@ -564,6 +594,14 @@ class ResidentExecutor:
         return reds
 
     # plan-cache stats proxy to the inner executor (shared planner)
+    @property
+    def tracer(self) -> AnyTracer:
+        return self._inner.tracer
+
+    @property
+    def ledgers(self) -> List[TransferLedger]:
+        return self._inner.ledgers
+
     @property
     def plan_hits(self) -> int:
         return self._inner.plan_hits

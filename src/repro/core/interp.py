@@ -46,6 +46,8 @@ from .plan import (
 from .tiling import Interval
 from .transfer import ResidencyManager, Slot
 from .transfer.engine import DISK, DOWN, UP
+from ..obs.audit import STREAM_NAMES
+from ..obs.tracer import AnyTracer, NULL_TRACER
 
 
 class _SimArray:
@@ -107,9 +109,16 @@ class LedgerInterpreter:
     def __init__(self, plan: Plan, hw: HardwareModel,
                  rm: Optional[ResidencyManager] = None,
                  spec: Optional[SpecState] = None,
-                 datasets: Optional[Dict[str, Any]] = None):
+                 datasets: Optional[Dict[str, Any]] = None,
+                 tracer: Optional[AnyTracer] = None,
+                 trace_tag: str = "",
+                 chain_index: int = 0):
         self.plan = plan
         self.hw = hw
+        self.tracer: AnyTracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_tag = trace_tag
+        self.chain_index = chain_index
+        self.eid_op: Dict[int, int] = {}   # ledger eid -> plan op index (#N)
         self.rm = rm if rm is not None else ResidencyManager(
             capacity_bytes=float("inf"), num_slots=plan.num_slots)
         self.spec = spec if spec is not None else SpecState()
@@ -163,6 +172,17 @@ class LedgerInterpreter:
         HaloUnpack.kind: "op_halo_unpack",
     }
 
+    # Ops whose ledger events are serviced by staged TransferHandles — their
+    # achieved timing is the handle's, emitted as lane spans after drain, so
+    # the dispatch span must NOT claim their eids.  Everything else executes
+    # inline on the issue thread and the dispatch span is the achieved record.
+    _HANDLE_KINDS = frozenset(
+        (Upload.kind, Download.kind, FetchHome.kind, SpillHome.kind))
+
+    # Sim mode replays the modelled timeline as spans (the drift-audit oracle
+    # case); the data plane emits wall-clock spans instead.
+    _trace_modelled = True
+
     def run(self) -> InterpResult:
         plan = self.plan
         self.spec_valid = (
@@ -173,11 +193,14 @@ class LedgerInterpreter:
         )
         self.slots = self.rm.begin_chain(plan.num_slots)
         self.begin()
-        for op in plan.ops:
-            getattr(self, self._DISPATCH[op.kind])(op)
+        if self.tracer.enabled:
+            self._run_ops_traced(plan)
+        else:
+            for op in plan.ops:
+                getattr(self, self._DISPATCH[op.kind])(op)
         self.finish()
         self.rm.end_chain()
-        return InterpResult(
+        res = InterpResult(
             reductions=self.reductions,
             makespan=self.ledger.simulate(),
             uploaded=self.uploaded, downloaded=self.downloaded,
@@ -188,6 +211,72 @@ class LedgerInterpreter:
             disk_read=self.disk_read, disk_written=self.disk_written,
             halo_messages=self.halo_messages, halo_bytes=self.halo_bytes,
         )
+        if self.tracer.enabled and self._trace_modelled:
+            self._emit_modelled_spans()
+        return res
+
+    def _run_ops_traced(self, plan: Plan) -> None:
+        """The dispatch loop with span emission: identical op semantics
+        (bit-identity with the untraced loop), plus the eid -> op-index map
+        both audit rows and modelled spans cite as ``#N``."""
+        tr = self.tracer
+        tag = self.trace_tag
+        ci = self.chain_index
+        wall = not self._trace_modelled
+        events = self.ledger.events
+        cur_tile: Optional[int] = None
+        tile_t0 = 0.0
+        for i, op in enumerate(plan.ops):
+            tile = getattr(op, "tile", None)
+            if wall and tile is not None and tile != cur_tile:
+                now = tr.clock()
+                if cur_tile is not None:
+                    tr.emit(f"tile {cur_tile}", cat="tile",
+                            track=tag + "tiles", t_start=tile_t0, t_end=now,
+                            args={"chain": ci, "tile": cur_tile})
+                cur_tile, tile_t0 = tile, now
+            n0 = len(events)
+            t0 = tr.clock()
+            getattr(self, self._DISPATCH[op.kind])(op)
+            t1 = tr.clock()
+            n1 = len(events)
+            for eid in range(n0, n1):
+                self.eid_op[eid] = i
+            if not wall:
+                continue
+            args: Dict[str, Any] = {"chain": ci, "op": i}
+            if tile is not None:
+                args["tile"] = tile
+            if op.kind in self._HANDLE_KINDS or n1 == n0:
+                track = tag + "dispatch"
+            else:
+                # Inline op: its dispatch IS the achieved timing for the
+                # events it issued — land it on the stream's own track.
+                args["eids"] = list(range(n0, n1))
+                track = tag + STREAM_NAMES.get(
+                    events[n0].stream, f"stream{events[n0].stream}")
+            tr.emit(op.kind, cat="op", track=track,
+                    t_start=t0, t_end=t1, args=args)
+        if wall and cur_tile is not None:
+            tr.emit(f"tile {cur_tile}", cat="tile", track=tag + "tiles",
+                    t_start=tile_t0, t_end=tr.clock(),
+                    args={"chain": ci, "tile": cur_tile})
+
+    def _emit_modelled_spans(self) -> None:
+        """Sim mode: replay the simulated ledger timeline as spans — one per
+        event at its modelled ``t_start``/``t_end``.  Auditing these against
+        the very same ledger must report per-stream drift of exactly 1.0."""
+        tr = self.tracer
+        tag = self.trace_tag
+        ci = self.chain_index
+        for ev in self.ledger.events:
+            tr.emit(ev.kind, cat="model",
+                    track=tag + STREAM_NAMES.get(ev.stream,
+                                                 f"stream{ev.stream}"),
+                    t_start=ev.t_start, t_end=ev.t_end,
+                    args={"chain": ci, "eid": ev.eid,
+                          "op": self.eid_op.get(ev.eid, -1),
+                          "stream": ev.stream, "bytes": ev.nbytes})
 
     # -- lifecycle hooks (data plane overrides) -------------------------------
     def begin(self) -> None:
@@ -490,13 +579,21 @@ class DataPlaneInterpreter(LedgerInterpreter):
     and patched with achieved post-codec wire bytes after the engine drains.
     """
 
+    # Wall-clock spans (dispatch + lane); the ledger keeps the model.
+    _trace_modelled = False
+
     def __init__(self, plan: Plan, hw: HardwareModel, *,
                  rm: ResidencyManager, spec: SpecState, cp: Any,
                  tx: Any, codecs: Dict[str, Any],
                  halo_runtime: Optional[Callable[[HaloExchange], None]]
-                 = None):
+                 = None,
+                 tracer: Optional[AnyTracer] = None,
+                 trace_tag: str = "",
+                 chain_index: int = 0):
         super().__init__(plan, hw, rm=rm, spec=spec,
-                         datasets=cp.info.datasets)
+                         datasets=cp.info.datasets,
+                         tracer=tracer, trace_tag=trace_tag,
+                         chain_index=chain_index)
         # Collective halo-exchange hook (sharded execution): the mesh-owning
         # executor supplies a callable that moves the real rows (host copies
         # on a virtual mesh, exchange_halos/ppermute under shard_map on a
@@ -576,6 +673,23 @@ class DataPlaneInterpreter(LedgerInterpreter):
                 self.downloaded_wire += wire
             else:   # DISK: achieved payload bytes (chunk-cache hits cost 0)
                 ev.duration = ledger.t_disk(wire)
+        tr = self.tracer
+        if tr.enabled and self.patches:
+            # Lane spans: the handles' own worker timestamps, one span per
+            # staged ledger event — the achieved side of the drift audit for
+            # the upload/download/disk streams.
+            lane_track = {UP: "upload", DOWN: "download", DISK: "disk"}
+            tag = self.trace_tag
+            ci = self.chain_index
+            for eid, handle, direction in self.patches:
+                ev = ledger.events[eid]
+                tr.emit(ev.kind, cat="lane",
+                        track=tag + lane_track[direction],
+                        t_start=handle.t_start, t_end=handle.t_end,
+                        args={"chain": ci, "eid": eid,
+                              "op": self.eid_op.get(eid, -1),
+                              "queue_wait_s": handle.queue_wait_s,
+                              "bytes": ev.nbytes})
         # Speculative-prefetch data capture: home is stable now that
         # downloads have drained, so snapshot the regions the next chain's
         # first tile is assumed to upload.  ``jnp.array`` copies — the

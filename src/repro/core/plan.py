@@ -767,7 +767,12 @@ def _items_str(items: Sequence[Item], limit: int = 4) -> str:
 
 def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
     """Per-tile op listing with modelled bytes; with ``hw``, the modelled
-    makespan (ledger-interpreted, cold caches) is appended."""
+    makespan (ledger-interpreted, cold caches) is appended.
+
+    Every op line carries its stable index (``#N`` = position in
+    ``plan.ops``): the same N the drift audit (:mod:`repro.obs.audit`)
+    reports as ``op #N``, traced spans carry in their ``op`` arg, and
+    :mod:`repro.core.verify` diagnostics cite as ``op N``."""
     tot = plan.totals()
     codec_set = sorted({c for _, c in plan.codec_names})
     lines = [
@@ -787,11 +792,12 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
            if plan.keep_live else ""),
     ]
     cur_tile = None
-    for op in plan.ops:
+    for idx, op in enumerate(plan.ops):
         t = getattr(op, "tile", None)
         if t is not None and t != cur_tile:
             cur_tile = t
             lines.append(f"  tile {t} -> slot {t % plan.num_slots}")
+        n_before = len(lines)
         if isinstance(op, HaloPack):
             names = " ".join(op.names[:4]) + (
                 f" +{len(op.names) - 4} more" if len(op.names) > 4 else "")
@@ -842,6 +848,11 @@ def format_plan(plan: Plan, hw=None, title: str = "plan") -> str:
             names = " ".join(n for n, _, _, _ in op.entries)
             lines.append(f"  writeback-pinned {names}  {_mb(op.raw)}"
                          f" (wire {_mb(op.wire)})")
+        if len(lines) > n_before:
+            # Stable op index (position in plan.ops), preserving indentation.
+            ln = lines[-1]
+            pad = len(ln) - len(ln.lstrip())
+            lines[-1] = f"{ln[:pad]}#{idx:<3d} {ln[pad:]}"
     lines.append(
         f"  totals: up {_mb(tot['uploaded'])} (wire {_mb(tot['uploaded_wire'])}),"
         f" down {_mb(tot['downloaded'])} (wire {_mb(tot['downloaded_wire'])}),"

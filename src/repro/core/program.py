@@ -98,6 +98,12 @@ class ExecutionConfig:
     # Verify every plan before interpreting it; error-severity diagnostics
     # raise PlanVerificationError instead of executing a corrupting stream.
     debug: bool = False
+    # -- observability (repro.obs) ---------------------------------------------
+    # ``trace=True`` mints a span Tracer shared by every executor this config
+    # builds (per-chain / per-op / transfer-lane spans, Chrome-trace export,
+    # drift audit); pass an existing ``repro.obs.Tracer`` to share one spine
+    # across sessions.  ``Session.trace()`` returns it.  Off by default.
+    trace: object = None                     # None/False | True | obs.Tracer
 
     def __post_init__(self) -> None:
         if isinstance(self.hw, str):
@@ -124,6 +130,7 @@ class ExecutionConfig:
             pinned=tuple(self.pinned),
             host_capacity=self.host_capacity,
             debug=self.debug,
+            trace=self.trace,
         )
         kw.update(overrides)
         return OOCConfig(**kw)
@@ -806,9 +813,20 @@ class Session:
             return
         self.close()
 
+    def trace(self):
+        """The observability spine's span buffer (:class:`repro.obs.Tracer`)
+        when this session was built with ``trace=``, else ``None``.  Use
+        ``trace().save(path)`` for a Perfetto-viewable Chrome trace, or feed
+        it with a backend ledger to :func:`repro.obs.audit.compare`."""
+        tr = getattr(self.backend, "tracer", None)
+        if tr is not None and getattr(tr, "enabled", False):
+            return tr
+        return None
+
     def transfer_stats(self) -> Dict[str, float]:
         """Transfer-subsystem counters: raw vs post-codec wire bytes, the
-        achieved compression ratio, and queue-wait time (zeros/defaults for
+        achieved compression ratio, queue-wait time, and per-lane queue-wait
+        / service-time histograms under ``"lanes"`` (zeros/defaults for
         backends without a transfer engine)."""
         fn = getattr(self.backend, "transfer_stats", None)
         if fn is not None:
@@ -819,7 +837,7 @@ class Session:
             "compression_ratio": 1.0, "queue_wait_s": 0.0,
             "elided_rows": 0, "evictions": 0, "pinned_hits": 0,
             "bytes_disk_read": 0, "bytes_disk_written": 0,
-            "halo_messages": 0, "halo_bytes": 0,
+            "halo_messages": 0, "halo_bytes": 0, "lanes": {},
         }
 
 

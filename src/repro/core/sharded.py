@@ -51,6 +51,8 @@ from .distributed import HaloExchangeStats
 from .executor import ChainStats, OOCConfig, OutOfCoreExecutor
 from .loop import Accessor, Arg, ParallelLoop
 from .mesh import DeviceMesh, HaloSpec, MeshError, ShardGeometry, shard_geometries
+from ..obs.metrics import merge_histogram_snapshots
+from ..obs.tracer import as_tracer
 
 # Cap on the auto-sized redundant-compute skirt (rows per interior side).
 # The skirt targets the deepest chain's accumulated halo depth (CloverLeaf's
@@ -251,6 +253,15 @@ class ShardedOutOfCoreExecutor:
             OutOfCoreExecutor(self.cfg)
             for _ in range(self.mesh.num_devices)
         ]
+        # One tracing spine for the whole mesh: each device's executor emits
+        # onto the shared tracer under a ``devN/`` track prefix (so Perfetto
+        # shows per-device compute/upload/download swim-lanes), and the mesh
+        # itself gets scatter/gather/exchange spans on a ``mesh`` track.
+        self.tracer = as_tracer(self.cfg.trace)
+        self.trace_tag = ""
+        for i, ex in enumerate(self.inner):
+            ex.tracer = self.tracer
+            ex.trace_tag = f"dev{i}/"
         self.history: List[ChainStats] = []
         # Achieved (data-plane) exchange traffic, counted by the collective
         # runtime; the modelled counterpart is summed over ChainStats.
@@ -292,14 +303,21 @@ class ShardedOutOfCoreExecutor:
         stats = [ex.transfer_stats() for ex in self.inner]
         out: Dict[str, float] = {"mode": self.inner[0].transfer.mode}
         for key in stats[0]:
-            if key == "mode":
-                continue
-            if key == "compression_ratio":
+            if key in ("mode", "compression_ratio", "lanes"):
                 continue
             out[key] = sum(s[key] for s in stats)
         wire = out.get("bytes_moved_wire", 0)
         raw = out.get("bytes_up_raw", 0) + out.get("bytes_down_raw", 0)
         out["compression_ratio"] = raw / wire if wire else 1.0
+        # Per-lane histograms fold across devices (fixed bucket bounds make
+        # the snapshots mergeable) instead of summing like the scalars.
+        lanes: Dict[str, Dict[str, dict]] = {}
+        for s in stats:
+            for lane, hists in s.get("lanes", {}).items():
+                dst = lanes.setdefault(lane, {})
+                for k, snap in hists.items():
+                    dst[k] = merge_histogram_snapshots(dst.get(k, {}), snap)
+        out["lanes"] = lanes
         return out
 
     def average_bandwidth_model(self) -> float:
@@ -393,6 +411,9 @@ class ShardedOutOfCoreExecutor:
     def _scatter(self, state: _ShardState, names) -> None:
         """Global home -> shard-local homes (full extended region + halos)
         for datasets whose global copy changed since the last sync."""
+        tr = self.tracer
+        t_tr0 = tr.clock() if tr.enabled else 0.0
+        moved = 0
         sd = state.shard_dim
         for name in names:
             gdat = state.globals[name]
@@ -404,11 +425,18 @@ class ShardedOutOfCoreExecutor:
                 vals = gdat.read_rows(sd, geo.ext_lo - h_lo,
                                       geo.ext_hi + h_hi)
                 ldat.write_rows(sd, -h_lo, geo.ext_size + h_hi, vals)
+                moved += vals.nbytes
             state.versions[name] = gdat.version
+        if tr.enabled and moved:
+            tr.emit("scatter", cat="mesh", track=self.trace_tag + "mesh",
+                    t_start=t_tr0, t_end=tr.clock(), args={"bytes": moved})
 
     def _gather(self, state: _ShardState, names) -> None:
         """Shard-local owned rows -> global home.  Edge shards also own the
         global halo rows (their halo-mirror loops wrote them)."""
+        tr = self.tracer
+        t_tr0 = tr.clock() if tr.enabled else 0.0
+        moved = 0
         sd = state.shard_dim
         n = state.mesh.num_devices
         extent = state.block.size[sd]
@@ -421,7 +449,11 @@ class ShardedOutOfCoreExecutor:
                 hi = geo.hi if s < n - 1 else extent + h_hi
                 vals = ldat.read_rows(sd, lo - geo.ext_lo, hi - geo.ext_lo)
                 gdat.write_rows(sd, lo, hi, vals)
+                moved += vals.nbytes
             state.versions[name] = gdat.version
+        if tr.enabled and moved:
+            tr.emit("gather", cat="mesh", track=self.trace_tag + "mesh",
+                    t_start=t_tr0, t_end=tr.clock(), args={"bytes": moved})
 
     def _halo_spec(self, state: _ShardState, s: int,
                    names: Tuple[str, ...]) -> HaloSpec:
@@ -459,6 +491,9 @@ class ShardedOutOfCoreExecutor:
         union = tuple(sorted({n for names in names_by_shard for n in names}))
         if not union:
             return
+        tr = self.tracer
+        t_tr0 = tr.clock() if tr.enabled else 0.0
+        msgs0, bytes0 = self.halo_stats.messages, self.halo_stats.bytes
         exchanged = None
         if self.exchange_path == "ppermute" and state.uniform:
             exchanged = self._exchange_ppermute(state, union, names_by_shard)
@@ -478,6 +513,14 @@ class ShardedOutOfCoreExecutor:
                         ghi - state.geos[dst].ext_lo, vals)
                 self.halo_stats.messages += 1
                 self.halo_stats.bytes += (ghi - glo) * rb
+        if tr.enabled:
+            tr.emit("halo-exchange", cat="mesh",
+                    track=self.trace_tag + "mesh",
+                    t_start=t_tr0, t_end=tr.clock(),
+                    args={"path": self.exchange_path if exchanged is not None
+                          else "host",
+                          "messages": self.halo_stats.messages - msgs0,
+                          "bytes": self.halo_stats.bytes - bytes0})
 
     def _exchange_ppermute(self, state: _ShardState, names,
                            names_by_shard) -> Dict:

@@ -23,7 +23,9 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from ...obs.metrics import Histogram
 
 UP = "up"
 DOWN = "down"
@@ -100,6 +102,10 @@ class TransferEngine:
             "bytes_disk_raw": 0, "bytes_disk_wire": 0,
             "queue_wait_s": 0.0, "busy_s": 0.0,
         }
+        # Per-lane latency distributions from the handle timestamps every
+        # task already records: queue-wait (submit -> start) and service
+        # (start -> end).  Lazily keyed by direction on first task.
+        self.lane_hist: Dict[str, Dict[str, Histogram]] = {}
 
     # -- submission ----------------------------------------------------------
     def submit(self, direction: str, fn: Callable[[], Tuple[int, int]],
@@ -158,11 +164,24 @@ class TransferEngine:
             st = self.stats
             st["queue_wait_s"] += handle.queue_wait_s
             st["busy_s"] += max(0.0, handle.t_end - handle.t_start)
+            lh = self.lane_hist.get(handle.direction)
+            if lh is None:
+                lh = self.lane_hist[handle.direction] = {
+                    "queue_wait": Histogram(), "service": Histogram()}
+            lh["queue_wait"].observe(handle.queue_wait_s)
+            lh["service"].observe(max(0.0, handle.t_end - handle.t_start))
             if handle.result is not None:
                 raw, wire = handle.result
                 st[f"tasks_{handle.direction}"] += 1
                 st[f"bytes_{handle.direction}_raw"] += raw
                 st[f"bytes_{handle.direction}_wire"] += wire
+
+    def lane_stats(self) -> Dict[str, Dict[str, Any]]:
+        """Per-lane queue-wait / service-time histogram snapshots
+        (``{"up": {"queue_wait": {...}, "service": {...}}, ...}``)."""
+        with self._lock:
+            return {lane: {k: h.snapshot() for k, h in hists.items()}
+                    for lane, hists in self.lane_hist.items()}
 
     # -- synchronisation -----------------------------------------------------
     def drain(self) -> None:

@@ -41,13 +41,16 @@ import tempfile
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union, TYPE_CHECKING
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Union,
+                    TYPE_CHECKING)
 
 from repro.core.backends import _ooc_executor
 from repro.core.memory import TPU_V5E, HardwareModel
 from repro.core.mesh import parse_mesh
 from repro.core.program import ExecutionConfig, Session, SessionClosedError
 from repro.core.store import load_checkpoint, save_checkpoint
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import AnyTracer, Tracer, as_tracer
 
 from .cache import SharedPlanCache
 from .errors import AdmissionError, ServeError, UnknownTenantError
@@ -118,6 +121,12 @@ class ServerClient:
     def tenant(self) -> str:
         return self._tenant
 
+    @property
+    def tracer(self) -> AnyTracer:
+        """The server-wide tracer (shared by every lane), so
+        ``Session.trace()`` works on server-backed sessions too."""
+        return self._server.tracer
+
     def run_chain(self, loops: Sequence["ParallelLoop"]
                   ) -> Dict[str, "np.ndarray"]:
         return self._server.submit(self._tenant, loops)
@@ -157,11 +166,23 @@ class StencilServer:
                  host_capacity: Optional[float] = None,
                  spill_dir: Optional[str] = None,
                  auto_preempt: bool = True,
-                 max_shared_plans: int = 128) -> None:
+                 max_shared_plans: int = 128,
+                 trace: Union[bool, Tracer] = False,
+                 clock: Optional[Callable[[], float]] = None) -> None:
         if backend not in ("ooc", "ooc-async", "sim"):
             raise ServeError(
                 f"serving lanes must be ooc-family executors, got {backend!r}")
         self.mesh = parse_mesh(mesh if mesh is not None else 1)
+        # One wall-clock source for everything the server times: tenant
+        # queue-wait accounting (ServerStats predicted-vs-achieved rows),
+        # serve-layer spans and lane spans all read ``self._clock`` — inject
+        # a fake in tests to pin them to the same instants.
+        self._clock: Callable[[], float] = (
+            clock if clock is not None else time.perf_counter)
+        self.tracer: AnyTracer = as_tracer(trace)
+        if self.tracer.enabled:
+            self.tracer.clock = self._clock  # type: ignore[method-assign]
+        self.metrics_registry = MetricsRegistry()
         self._config = ExecutionConfig(
             backend="ooc", hw=hw, capacity_bytes=capacity_bytes,
             num_slots=num_slots, num_tiles=num_tiles, tiled_dim=tiled_dim,
@@ -173,6 +194,12 @@ class StencilServer:
         self.lanes: List["OutOfCoreExecutor"] = [
             _ooc_executor(self._config, shared_plans=self.plan_cache)
             for _ in range(self.mesh.num_devices)]
+        # The tracer rides on the lanes directly rather than through
+        # ``self._config`` so the admission oracle's sim executor (which
+        # shares that config) never pollutes the trace with phantom runs.
+        for i, lane_ex in enumerate(self.lanes):
+            lane_ex.tracer = self.tracer
+            lane_ex.trace_tag = f"lane{i}/"
         self.oracle = AdmissionOracle(self._config, self.plan_cache)
         self.policy: SchedulingPolicy = make_policy(policy)
         self.auto_preempt = auto_preempt
@@ -238,11 +265,20 @@ class StencilServer:
                 for a in lp.args:
                     ten.datasets[a.dat.name] = a.dat
             cyclic = ten.cfg.cyclic
+        tr = self.tracer
+        mr = self.metrics_registry
+        t_adm = tr.clock() if tr.enabled else 0.0
         verdict = self.oracle.predict(loops, cyclic=cyclic, tenant=name)
+        if tr.enabled:
+            tr.emit("admit", cat="serve", track=f"tenant/{name}",
+                    t_start=t_adm, t_end=tr.clock(),
+                    args={"tenant": name, "admitted": verdict.admitted,
+                          "predicted_s": verdict.predicted_makespan_s})
         if not verdict.admitted:
             with self._cond:
                 ten.rejected += 1
                 self.jobs_rejected += 1
+            mr.counter("jobs_rejected").inc()
             raise AdmissionError(
                 f"job rejected for tenant {name!r}: {verdict.reason}",
                 predicted_bytes=verdict.predicted_bytes,
@@ -257,8 +293,16 @@ class StencilServer:
             # Chain boundary: homes are authoritative, so the snapshot is the
             # tenant's whole live state.  Taken outside the server lock —
             # only this tenant's thread touches these datasets.
+            t_ck = tr.clock() if tr.enabled else 0.0
             save_checkpoint(preempt_path, list(ten.datasets.values()),
                             chains_flushed=ten.chains)
+            if tr.enabled:
+                tr.emit("preempt-checkpoint", cat="serve",
+                        track=f"tenant/{name}",
+                        t_start=t_ck, t_end=tr.clock(),
+                        args={"tenant": name,
+                              "datasets": len(ten.datasets)})
+            mr.counter("preemptions").inc()
             with self._cond:
                 ten.preempt_requested = False
                 ten.preemptions += 1
@@ -267,13 +311,20 @@ class StencilServer:
                 ten.ckpt_path = preempt_path
                 ten.needs_cache_reset = True
 
-        t0 = time.perf_counter()
+        t0 = self._clock()
         with self._cond:
             lane_idx = self._await_grant_locked(ten, verdict)
-            ten.queue_wait_s += time.perf_counter() - t0
+            t_grant = self._clock()
+            ten.queue_wait_s += t_grant - t0
             ten.state = "running"
             ten.last_pred_s = verdict.predicted_makespan_s
             ten.predicted_s += verdict.predicted_makespan_s
+        if tr.enabled:
+            tr.emit("queue-wait", cat="serve", track=f"tenant/{name}",
+                    t_start=t0, t_end=t_grant,
+                    args={"tenant": name, "lane": lane_idx})
+        mr.histogram("queue_wait_s").observe(t_grant - t0)
+        mr.gauge("queue_depth").set(float(len(self._waiting)))
         lane = self.lanes[lane_idx]
         try:
             if lane.tenant != name or ten.needs_cache_reset:
@@ -284,9 +335,15 @@ class StencilServer:
                 # Resume after preemption — possibly on a different lane
                 # (migration).  Restoring re-materialises the exact homes the
                 # checkpoint captured, so the resumed run is bit-identical.
+                t_rs = tr.clock() if tr.enabled else 0.0
                 load_checkpoint(ten.ckpt_path, list(ten.datasets.values()))
                 lane.reset_data_caches()
                 ten.ckpt_path = None
+                if tr.enabled:
+                    tr.emit("preempt-restore", cat="serve",
+                            track=f"tenant/{name}",
+                            t_start=t_rs, t_end=tr.clock(),
+                            args={"tenant": name, "lane": lane_idx})
             lane.cfg.cyclic = bool(ten.cfg.cyclic)
             h0 = len(lane.history)
             hits0 = lane.plan_hits
@@ -301,11 +358,20 @@ class StencilServer:
                 ten.chains += 1
                 ten.loops += len(loops)
                 self.jobs_completed += 1
+            mr.counter("jobs_completed").inc()
+            mr.histogram("achieved_modelled_s").observe(achieved)
             return reds
         finally:
             with self._cond:
                 ten.state = "idle" if not ten.closed else "closed"
                 self._release_locked(ten)
+            if tr.enabled:
+                # The lane lease: one slice per job on the lane's own track,
+                # named after the tenant that held it.
+                tr.emit(name, cat="lease", track=f"lane{lane_idx}",
+                        t_start=t_grant, t_end=tr.clock(),
+                        args={"tenant": name, "lane": lane_idx,
+                              "predicted_s": verdict.predicted_makespan_s})
 
     def _next_seq_locked(self) -> int:
         self._seq += 1
@@ -403,6 +469,20 @@ class StencilServer:
                 "predicted_queue_wait_s": backlog / max(len(self.lanes), 1),
                 "predicted_makespan_s": ten.last_pred_s,
             }
+
+    def metrics(self) -> Dict[str, Any]:
+        """Snapshot of the server's :class:`~repro.obs.MetricsRegistry` —
+        counters (``jobs_completed`` / ``jobs_rejected`` / ``preemptions``),
+        the ``queue_wait_s`` and ``achieved_modelled_s`` histograms, and
+        instantaneous scheduler gauges.  All timings in it were read from the
+        same injected clock the tracer and :meth:`stats` rows use."""
+        mr = self.metrics_registry
+        with self._cond:
+            mr.gauge("queue_depth").set(float(len(self._waiting)))
+            mr.gauge("free_lanes").set(float(len(self._free)))
+            mr.gauge("tenants").set(float(sum(
+                1 for t in self._tenants.values() if not t.closed)))
+        return mr.snapshot()
 
     def stats(self) -> ServerStats:
         """Snapshot of every counter the serving layer keeps."""

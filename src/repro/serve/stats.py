@@ -13,7 +13,13 @@ class TenantStats:
     ``achieved_modelled_s`` the ledger makespans the executing interpreter
     actually recorded — both come from the same :class:`TransferLedger`
     model, so their ratio is the serving layer's *scheduling* overhead
-    signal (cache warmth, splits), not model error."""
+    signal (cache warmth, splits), not model error.
+
+    ``queue_wait_s`` (and every other wall-time in these rows) is read from
+    the server's single injected clock (``StencilServer(clock=...)``) — the
+    same source the :mod:`repro.obs` tracer stamps serve spans with, so the
+    predicted-vs-achieved rows and the trace timeline can be compared
+    instant-for-instant."""
 
     tenant: str
     priority: int = 0
